@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: suite construction (cached), timers, CSV."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Callable, Dict
+
+from repro.core.formats import CSRMatrix, SELLMatrix, csr_to_sell
+from repro.core.matrices import paper_suite
+
+SCALE = os.environ.get("BENCH_SCALE", "bench")  # ci | bench | paper
+
+
+@functools.lru_cache(maxsize=1)
+def suite() -> Dict[str, CSRMatrix]:
+    return paper_suite(SCALE, seed=0)
+
+
+@functools.lru_cache(maxsize=1)
+def sell_suite() -> Dict[str, SELLMatrix]:
+    return {k: csr_to_sell(v) for k, v in suite().items()}
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,63 @@
+"""Paper Fig. 3: indirect stream bandwidth per matrix x adapter variant,
+SELL and CSR formats. Claims C1-C3 checked against the paper's values."""
+from __future__ import annotations
+
+import statistics
+
+from repro.core.formats import csr_index_stream, sell_index_stream
+from repro.core.perfmodel import indirect_stream_perf
+
+from .common import emit, sell_suite, suite, timed
+
+VARIANTS = ("MLPnc", "MLP64", "MLP128", "MLP256", "SEQ256")
+
+
+def run() -> dict:
+    rows = {}
+    for name, csr in suite().items():
+        sell = sell_suite()[name]
+        streams = {"sell": sell_index_stream(sell), "csr": csr_index_stream(csr)}
+        for fmt, stream in streams.items():
+            for variant in VARIANTS:
+                res, us = timed(indirect_stream_perf, stream, variant)
+                rows[(name, fmt, variant)] = res
+                emit(
+                    f"fig3/{name}/{fmt}/{variant}",
+                    us,
+                    f"bw_gbps={res.effective_bw_gbps:.2f};"
+                    f"coalesce_rate={res.coalesce_rate:.2f};"
+                    f"bottleneck={res.bottleneck}",
+                )
+    # --- claim checks
+    claims = {}
+    for fmt, target in (("sell", 8.4), ("csr", 8.6)):
+        sp = [
+            rows[(n, fmt, "MLP256")].effective_bw_gbps
+            / rows[(n, fmt, "MLPnc")].effective_bw_gbps
+            for n in suite()
+        ]
+        claims[f"C1_speedup_{fmt}"] = (statistics.mean(sp), target)
+    over70 = sum(
+        1 for n in suite()
+        if rows[(n, "sell", "MLP256")].effective_bw_gbps > 0.7 * 32
+    )
+    claims["C2_matrices_over_70pct"] = (over70, 12)
+    seq_sp = [
+        rows[(n, "sell", "SEQ256")].effective_bw_gbps
+        / rows[(n, "sell", "MLPnc")].effective_bw_gbps
+        for n in suite()
+    ]
+    claims["C3_seq_speedup"] = (statistics.mean(seq_sp), 2.9)
+    claims["C3_seq_capped_8gbps"] = (
+        max(rows[(n, "sell", "SEQ256")].effective_bw_gbps for n in suite()),
+        8.0,
+    )
+    base_bw = [rows[(n, "sell", "MLPnc")].effective_bw_gbps for n in suite()]
+    claims["C1_baseline_bw"] = (statistics.mean(base_bw), 2.9)
+    for k, (got, want) in claims.items():
+        emit(f"fig3/claim/{k}", 0.0, f"got={got:.2f};paper={want}")
+    return claims
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig. 5: end-to-end SpMV on the four vector-processor systems
+(base / pack0 / pack64 / pack256): speedups, indirect-access share, off-chip
+traffic, memory utilization. Claims C5-C6."""
+from __future__ import annotations
+
+import statistics
+
+from repro.core.perfmodel import spmv_perf
+
+from .common import emit, sell_suite
+
+SYSTEMS = ("base", "pack0", "pack64", "pack256")
+
+
+def run() -> dict:
+    rows = {}
+    for name, sell in sell_suite().items():
+        for system in SYSTEMS:
+            r = spmv_perf(sell, system)
+            rows[(name, system)] = r
+            emit(
+                f"fig5/{name}/{system}",
+                r.cycles,  # model cycles stand in for time (1 cycle = 1 ns)
+                f"speedup_vs_base={rows[(name, 'base')].cycles / r.cycles:.2f};"
+                f"indirect_frac={r.indirect_cycles / r.cycles:.2f};"
+                f"traffic_ratio={r.traffic_ratio:.2f};"
+                f"mem_util={r.mem_utilization:.3f}",
+            )
+    gm = statistics.geometric_mean
+    names = list(sell_suite())
+    claims = {
+        "C5_pack0_vs_base": (
+            gm([rows[(n, "base")].cycles / rows[(n, "pack0")].cycles
+                for n in names]), 2.7),
+        "C5_pack256_vs_pack0": (
+            gm([rows[(n, "pack0")].cycles / rows[(n, "pack256")].cycles
+                for n in names]), 3.0),
+        "C5_pack256_vs_base": (
+            gm([rows[(n, "base")].cycles / rows[(n, "pack256")].cycles
+                for n in names]), 10.0),
+        "C6_traffic_pack0": (
+            statistics.mean([rows[(n, "pack0")].traffic_ratio for n in names]),
+            5.6),
+        "C6_traffic_pack256": (
+            statistics.mean([rows[(n, "pack256")].traffic_ratio
+                             for n in names]), 1.29),
+        "C6_util_base": (
+            statistics.mean([rows[(n, "base")].mem_utilization
+                             for n in names]), 0.059),
+        "C6_util_pack0": (
+            statistics.mean([rows[(n, "pack0")].mem_utilization
+                             for n in names]), 0.658),
+        "C6_util_pack256": (
+            statistics.mean([rows[(n, "pack256")].mem_utilization
+                             for n in names]), 0.61),
+    }
+    for k, (got, want) in claims.items():
+        emit(f"fig5/claim/{k}", 0.0, f"got={got:.2f};paper={want}")
+    return claims
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig. 6: (a) adapter area/storage model vs reported implementation
+points; (b) on-chip efficiency vs SX-Aurora / A64FX. Claim C7."""
+from __future__ import annotations
+
+import statistics
+
+from repro.core.perfmodel import (
+    adapter_area_model,
+    onchip_efficiency,
+    spmv_perf,
+)
+
+from .common import emit, sell_suite
+
+
+def run() -> dict:
+    out = {}
+    for w in (64, 128, 256):
+        m = adapter_area_model(w)
+        out[w] = m
+        emit(
+            f"fig6a/adapter_W{w}", 0.0,
+            f"coalescer_kge={m['coalescer_kge']:.0f};"
+            f"total_kge={m['total_kge']:.0f};"
+            f"area_mm2={m['area_mm2']:.3f};"
+            f"storage_kb={m['onchip_storage_kb']:.1f}",
+        )
+    paper_pts = {64: (307, 0.19), 128: (617, 0.26), 256: (1035, 0.34)}
+    for w, (kge, mm2) in paper_pts.items():
+        emit(
+            f"fig6a/claim/C7_W{w}", 0.0,
+            f"got_kge={out[w]['coalescer_kge']:.0f};paper_kge={kge};"
+            f"got_mm2={out[w]['area_mm2']:.2f};paper_mm2={mm2}",
+        )
+
+    # (b) on-chip efficiency: our SpMV GFLOP/s from the pack256 model
+    # (2 flops per nnz at modeled runtime), suite average.
+    gflops = []
+    for sell in sell_suite().values():
+        r = spmv_perf(sell, "pack256")
+        gflops.append(2 * sell.nnz_padded / r.cycles)  # flops/cycle == GFLOP/s
+    ours_gflops = statistics.mean(gflops)
+    eff = onchip_efficiency()
+    ours = eff["ours"]
+    ours_perf_per_bw = ours_gflops / ours["mem_bw_gbps"]
+    for sysname in ("sx-aurora", "a64fx"):
+        ref = eff[sysname]
+        storage_ratio = ref["storage_mb_per_bw"] / ours["storage_mb_per_bw"]
+        perf_ratio = ours_perf_per_bw / ref["spmv_perf_per_bw"]
+        target = {"sx-aurora": (1.4, 1.0), "a64fx": (2.6, 0.9)}[sysname]
+        emit(
+            f"fig6b/claim/C7_vs_{sysname}", 0.0,
+            f"onchip_eff_ratio={storage_ratio:.2f};paper={target[0]};"
+            f"perf_eff_ratio={perf_ratio:.2f};paper={target[1]}",
+        )
+    emit("fig6b/ours", 0.0,
+         f"gflops={ours_gflops:.2f};storage_mb={ours['onchip_mb']:.2f};"
+         f"bw_gbps={ours['mem_bw_gbps']:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

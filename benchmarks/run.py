@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper figure/table. Prints
+``name,us_per_call,derived`` CSV rows. `BENCH_SCALE=ci|bench|paper` controls
+matrix sizes (default bench)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _kernel_microbench() -> None:
+    """Kernel-level rows: coalesced data path vs plain gather (CPU timings are
+    indicative only — the deployment target is TPU; structural metrics
+    (wide-access counts) are machine-independent)."""
+    import jax.numpy as jnp
+
+    from repro.core.coalescer import coalesce_stats
+    from repro.core.indirect_stream import coalesced_gather
+    from .common import emit, timed
+
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.standard_normal((65536, 64)).astype(np.float32))
+    # banded-like stream (high locality)
+    idx = jnp.asarray(
+        (np.repeat(np.arange(8192), 4) + rng.integers(0, 32, 32768))
+        % 65536
+    ).astype(jnp.int32)
+    for backend in ("jnp", "coalesced"):
+        out, us = timed(
+            lambda b=backend: coalesced_gather(
+                table, idx, window=256, block_rows=8, backend=b
+            ).block_until_ready(),
+            repeats=3,
+        )
+        wide, rate = coalesce_stats(np.asarray(idx), window=256, block_rows=8)
+        emit(
+            f"kernel/coalesced_gather/{backend}", us,
+            f"n=32768;wide_accesses={wide};coalesce_rate={rate:.2f}",
+        )
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import fig3_indirect_stream, fig4_breakdown, fig5_spmv, fig6_efficiency
+
+    print("name,us_per_call,derived")
+    fig3_indirect_stream.run()
+    fig4_breakdown.run()
+    fig5_spmv.run()
+    fig6_efficiency.run()
+    _kernel_microbench()
+    try:
+        from . import roofline
+
+        roofline.run()
+    except Exception as e:  # dry-run artifacts may not exist yet
+        print(f"roofline/skipped,0.0,reason={type(e).__name__}")
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: the paper's mechanism end to end in five minutes.
+
+1. Build a sparse matrix, convert to SELL (paper Fig. 1).
+2. Run SpMV through the coalesced indirect-access data path and the Pallas
+   kernel; verify against dense.
+3. Model the adapter variants on the matrix's real index stream (Fig. 3 row).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    coalesce_stats,
+    coalesced_gather,
+    csr_to_sell,
+    dense_to_csr,
+    indirect_stream_perf,
+    spmv_sell_coalesced,
+)
+from repro.core.formats import sell_index_stream
+from repro.core.spmv import _sell_padded
+from repro.kernels import ops as kops
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # 1. a banded matrix (high index locality, like af-shell10)
+    n = 512
+    dense = np.zeros((n, n))
+    for i in range(n):
+        lo, hi = max(0, i - 12), min(n, i + 12)
+        cols = rng.choice(np.arange(lo, hi), size=8, replace=False)
+        dense[i, cols] = rng.standard_normal(8)
+    sell = csr_to_sell(dense_to_csr(dense), width_multiple=8)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+
+    # 2a. SpMV through the coalesced data path (pure jnp, semantics oracle)
+    y = spmv_sell_coalesced(sell, x, window=256, block_rows=8)
+    err = np.abs(np.asarray(y) - dense @ np.asarray(x)).max()
+    print(f"coalesced SELL SpMV max err vs dense: {err:.2e}")
+
+    # 2b. the Pallas TPU kernel (interpret mode on CPU)
+    ci, va, _ = _sell_padded(sell)
+    y_k = kops.sell_spmv(jnp.asarray(ci), jnp.asarray(va.astype(np.float32)),
+                         x, cols_per_chunk=8, block_rows=8)
+    err_k = np.abs(np.asarray(y_k)[: sell.n_rows] - dense @ np.asarray(x)).max()
+    print(f"Pallas sell_spmv kernel   max err vs dense: {err_k:.2e}")
+
+    # 2c. the standalone coalesced gather (what embedding/MoE/paged-KV use)
+    table = jnp.asarray(rng.standard_normal((4096, 64)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 4096, 2048).astype(np.int32))
+    g = coalesced_gather(table, idx, backend="pallas")
+    print(f"coalesced_gather (pallas) exact: "
+          f"{bool((np.asarray(g) == np.asarray(table)[np.asarray(idx)]).all())}")
+
+    # 3. what the coalescer buys on this matrix's real index stream
+    stream = sell_index_stream(sell)
+    wide, rate = coalesce_stats(stream, window=256, block_rows=8)
+    print(f"\nindex stream: {len(stream)} requests -> {wide} wide accesses "
+          f"(coalesce rate {rate:.2f})")
+    for variant in ("MLPnc", "SEQ256", "MLP256"):
+        r = indirect_stream_perf(stream, variant)
+        print(f"  {variant:7s}: {r.effective_bw_gbps:6.2f} GB/s effective "
+              f"({r.bottleneck}-bound)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Serving example: batched decode with (a) the dense KV cache and (b) the
+paged KV cache whose page gather runs through the paper's coalescer — shared
+prefixes across requests coalesce into single page fetches.
+
+Run: PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.coalescer import coalesce_stats
+from repro.launch.serve import generate
+from repro.models import Runtime, build_model, make_input_batch
+from repro.models.paged_kv import alloc_paged, append_token, paged_attention
+
+
+def main() -> None:
+    cfg = get_arch("tinyllama-1.1b").reduced()
+    model = build_model(cfg)
+    rt = Runtime()
+    params = model.init(jax.random.PRNGKey(0))
+
+    # (a) dense-cache batched generation
+    batch = make_input_batch(cfg, 4, 12)
+    t0 = time.time()
+    out = generate(model, params, batch["tokens"], max_new_tokens=24, rt=rt,
+                   extras_batch=batch)
+    dt = time.time() - t0
+    print(f"dense cache: generated {out.shape[0]}x{out.shape[1]} tokens "
+          f"in {dt:.2f}s")
+
+    # (b) paged KV with coalesced page gather + shared-prefix reuse
+    B, n_kv, hd, H = 8, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
+    block = 4
+    cache = alloc_paged(n_pages=256, block=block, n_kv=n_kv, hd=hd,
+                        batch=B, max_len=32, dtype=jnp.float32)
+    # simulate a shared system-prompt prefix: all requests point at the same
+    # first two physical pages
+    table = np.array(cache.page_table)  # writable copy
+    table[:, :2] = [[0, 1]] * B
+    cache.page_table = jnp.asarray(table)  # type: ignore[assignment]
+
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        k = jnp.asarray(rng.standard_normal((B, n_kv, hd)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((B, n_kv, hd)).astype(np.float32))
+        cache = append_token(cache, k, v)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)).astype(np.float32))
+    out = paged_attention(q, cache, n_heads=H)
+    print(f"paged attention out: {out.shape}")
+
+    stream = np.asarray(cache.page_table).reshape(-1)
+    wide, rate = coalesce_stats(stream, window=stream.size, block_rows=1)
+    print(f"page gather: {stream.size} page refs -> {wide} physical fetches "
+          f"(prefix sharing coalesced, rate {rate:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution (parallel indexing + coalescing for
+indirect access) as composable JAX modules, plus the cycle-level perf model
+reproducing the paper's evaluation."""
+
+from .coalescer import (  # noqa: F401
+    BlockSchedule,
+    SENTINEL,
+    build_block_schedule,
+    coalesce_stats,
+    cshr_reference_trace,
+    schedule_gather_reference,
+    window_unique_counts,
+)
+from .formats import (  # noqa: F401
+    CSRMatrix,
+    SELLMatrix,
+    coo_to_csr,
+    csr_to_sell,
+    dense_to_csr,
+)
+from .indirect_stream import coalesced_gather  # noqa: F401
+from .perfmodel import (  # noqa: F401
+    DEFAULT_HW,
+    HWConfig,
+    adapter_area_model,
+    indirect_stream_perf,
+    spmv_perf,
+)
+from .spmv import spmv_csr, spmv_sell, spmv_sell_coalesced  # noqa: F401

@@ -1,0 +1,237 @@
+"""Functional model of the paper's parallel request coalescer (Sec. II-B).
+
+Three layers, all semantics-equivalent on *what* gets fetched, differing in
+*how fast* they can do it (that part lives in perfmodel.py):
+
+1. `cshr_reference_trace` — slow, step-exact emulation of the CSHR policy
+   (single active tag; parallel window scan absorbs all hits per cycle; misses
+   seed the next tag; watchdog flush). Ground truth for tests.
+2. `window_unique_counts` — vectorized numpy: per-window unique-block counts and
+   totals for million-element index traces (drives the perf model).
+3. `build_block_schedule` / `coalesce_indices` — JAX (jittable) schedule
+   construction used by the Pallas kernels and the framework's gather sites:
+   per window, the padded list of unique wide-block tags ("request warps"),
+   plus per-element (warp, offset) coordinates = the CSHR Hitmap/Offsets
+   metadata, reshaped for a systolic consumer.
+
+Terminology (paper -> here):
+  wide DRAM block  -> `block` of `block_rows` consecutive table rows
+  window (W reqs)  -> `window` consecutive indices
+  CSHR tag         -> entry of `tags[w, :]`
+  Hitmap           -> `elem_warp[w, :] == warp_id` (recomputed vectorized)
+  Offsets          -> `elem_offset[w, :]`
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# 1. Step-exact CSHR reference (ground truth for tests)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CSHRTrace:
+    """Per-issued-wide-access record of the CSHR policy on one window stream."""
+
+    tags: List[int]  # wide-block address of each issued access, in issue order
+    hitmaps: List[np.ndarray]  # bool (W,) — which window slots were served
+    offsets: List[np.ndarray]  # int (hits,) — row offset within block per hit
+    cycles: int  # coalescer-side cycles consumed (1 tag scan per cycle)
+
+
+def cshr_reference_trace(
+    indices: np.ndarray, *, window: int, block_rows: int
+) -> CSHRTrace:
+    """Emulate Sec. II-B exactly: windows of `window` oldest requests; each
+    cycle the request watcher scans the window in parallel against one CSHR
+    tag, absorbs all hits, issues the wide access, and the oldest remaining
+    miss seeds the next tag. Partial final window = watchdog flush."""
+    tags: List[int] = []
+    hitmaps: List[np.ndarray] = []
+    offsets: List[np.ndarray] = []
+    cycles = 0
+    n = len(indices)
+    for lo in range(0, n, window):
+        win = np.asarray(indices[lo : lo + window], dtype=np.int64)
+        blocks = win // block_rows
+        pending = np.ones(len(win), dtype=bool)
+        while pending.any():
+            first = int(np.argmax(pending))  # oldest pending request
+            tag = int(blocks[first])
+            hit = pending & (blocks == tag)
+            tags.append(tag)
+            hitmaps.append(hit.copy())
+            offsets.append((win[hit] % block_rows).astype(np.int64))
+            pending &= ~hit
+            cycles += 1
+    return CSHRTrace(tags=tags, hitmaps=hitmaps, offsets=offsets, cycles=cycles)
+
+
+# ---------------------------------------------------------------------------
+# 2. Vectorized trace statistics (perf model fast path)
+# ---------------------------------------------------------------------------
+
+
+def window_unique_counts(
+    indices: np.ndarray, *, window: int, block_rows: int
+) -> np.ndarray:
+    """Per-window count of unique wide blocks (= wide accesses the parallel
+    coalescer issues for that window). Fully vectorized; safe for 10^8 nnz."""
+    idx = np.asarray(indices, dtype=np.int64)
+    n = idx.size
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    blocks = idx // block_rows
+    win_id = np.arange(n, dtype=np.int64) // window
+    n_win = int(win_id[-1]) + 1
+    # Unique (window, block) pairs via sort of a combined key.
+    key = win_id * (blocks.max() + 1) + blocks
+    key.sort()
+    new = np.empty(n, dtype=bool)
+    new[0] = True
+    np.not_equal(key[1:], key[:-1], out=new[1:])
+    uniq_win = key[new] // (blocks.max() + 1)
+    counts = np.zeros(n_win, dtype=np.int64)
+    np.add.at(counts, uniq_win, 1)
+    return counts
+
+
+def coalesce_stats(
+    indices: np.ndarray, *, window: int, block_rows: int
+) -> Tuple[int, float]:
+    """(total wide element accesses, coalesce rate).
+
+    Coalesce rate per the paper: effective indirect elements / data requested
+    from downstream, in elements — i.e. nnz / (wide_accesses * block_rows)."""
+    counts = window_unique_counts(indices, window=window, block_rows=block_rows)
+    wide = int(counts.sum())
+    if wide == 0:
+        return 0, 0.0
+    return wide, float(len(indices)) / float(wide * block_rows)
+
+
+# ---------------------------------------------------------------------------
+# 3. JAX schedule construction (kernels + framework gather sites)
+# ---------------------------------------------------------------------------
+
+
+def _unique_padded(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sorted unique values of 1-D `x`, padded to length k with SENTINEL.
+    Returns (uniques (k,), count). Values beyond k are dropped (callers pick
+    k >= worst case; `build_block_schedule` asserts on overflow host-side)."""
+    s = jnp.sort(x)
+    is_new = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    rank = jnp.cumsum(is_new) - 1
+    out = jnp.full((k,), SENTINEL, dtype=x.dtype)
+    out = out.at[jnp.where(is_new, rank, k)].set(
+        jnp.where(is_new, s, SENTINEL), mode="drop"
+    )
+    return out, is_new.sum()
+
+
+@dataclasses.dataclass
+class BlockSchedule:
+    """Coalescer metadata for a whole index stream, kernel-ready.
+
+    tags:        (n_windows, max_warps) int32 — unique block ids per window,
+                 SENTINEL-padded ("request warp" tags, sorted within window).
+    n_warps:     (n_windows,) int32 — valid warps per window.
+    elem_warp:   (n_windows, window) int32 — which warp serves each element
+                 (the inverse Hitmap).
+    elem_offset: (n_windows, window) int32 — row offset within the wide block
+                 (the CSHR Offsets field).
+    Padding elements (stream tail) point at warp 0 offset 0 and are masked by
+    `elem_valid`.
+    """
+
+    tags: jnp.ndarray
+    n_warps: jnp.ndarray
+    elem_warp: jnp.ndarray
+    elem_offset: jnp.ndarray
+    elem_valid: jnp.ndarray
+    window: int
+    block_rows: int
+
+    @property
+    def n_windows(self) -> int:
+        return int(self.tags.shape[0])
+
+    @property
+    def max_warps(self) -> int:
+        return int(self.tags.shape[1])
+
+
+def _schedule_one_window(win: jnp.ndarray, block_rows: int, max_warps: int):
+    blocks = win // block_rows
+    tags, n = _unique_padded(blocks, max_warps)
+    # warp id of each element = position of its block in the sorted unique tags
+    elem_warp = jnp.searchsorted(tags, blocks).astype(jnp.int32)
+    elem_offset = (win % block_rows).astype(jnp.int32)
+    return tags.astype(jnp.int32), n.astype(jnp.int32), elem_warp, elem_offset
+
+
+def build_block_schedule(
+    indices: jnp.ndarray,
+    *,
+    window: int,
+    block_rows: int,
+    max_warps: int | None = None,
+) -> BlockSchedule:
+    """Vectorized (vmapped) schedule over all windows. `indices` is 1-D; the
+    tail is padded with index 0 (valid=False). jit-safe for fixed shapes."""
+    indices = jnp.asarray(indices)
+    n = indices.shape[0]
+    n_windows = max(1, -(-n // window))
+    pad = n_windows * window - n
+    valid = jnp.arange(n_windows * window) < n
+    idx_p = jnp.concatenate(
+        [indices.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)]
+    ).reshape(n_windows, window)
+    if max_warps is None:
+        max_warps = window  # always sufficient
+    tags, n_warps, elem_warp, elem_offset = jax.vmap(
+        lambda w: _schedule_one_window(w, block_rows, max_warps)
+    )(idx_p)
+    return BlockSchedule(
+        tags=tags,
+        n_warps=n_warps,
+        elem_warp=elem_warp,
+        elem_offset=elem_offset,
+        elem_valid=valid.reshape(n_windows, window),
+        window=window,
+        block_rows=block_rows,
+    )
+
+
+def schedule_gather_reference(
+    table: jnp.ndarray, schedule: BlockSchedule, n_out: int
+) -> jnp.ndarray:
+    """Execute a schedule against a (rows, d) table exactly the way the data
+    path does — fetch each warp's wide block once, extract elements by offset —
+    and return elements in original stream order. Pure jnp; used to prove the
+    schedule is semantics-preserving and as the kernel oracle."""
+    rows, d = table.shape
+    n_blocks = -(-rows // schedule.block_rows)
+    padded = jnp.zeros((n_blocks * schedule.block_rows, d), table.dtype)
+    padded = padded.at[:rows].set(table)
+    blocks = padded.reshape(n_blocks, schedule.block_rows, d)
+
+    def per_window(tags, elem_warp, elem_offset):
+        safe_tags = jnp.where(tags == SENTINEL, 0, tags)
+        warp_data = blocks[safe_tags]  # (max_warps, block_rows, d) — one wide
+        # access per warp: this is the coalesced fetch.
+        return warp_data[elem_warp, elem_offset]  # (window, d)
+
+    out = jax.vmap(per_window)(
+        schedule.tags, schedule.elem_warp, schedule.elem_offset
+    )
+    return out.reshape(-1, d)[:n_out]

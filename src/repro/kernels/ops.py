@@ -1,0 +1,63 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else they run in
+``interpret=True`` mode (Python-evaluated kernel bodies) so the whole library
+is testable on CPU. ``backend="jnp"`` falls through to the oracle — used by
+the framework when a call site is too small to justify a kernel launch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .coalesced_gather import coalesced_gather_pallas
+from .sell_spmv import sell_spmv_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def coalesced_gather(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    *,
+    window: int = 256,
+    block_rows: int = 8,
+    max_warps: int | None = None,
+    backend: str = "pallas",
+) -> jnp.ndarray:
+    if backend == "jnp":
+        return ref.coalesced_gather_ref(table, indices)
+    return coalesced_gather_pallas(
+        table,
+        indices,
+        window=window,
+        block_rows=block_rows,
+        max_warps=max_warps,
+        interpret=_interpret_default(),
+    )
+
+
+def sell_spmv(
+    colidx: jnp.ndarray,
+    values: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    cols_per_chunk: int = 8,
+    block_rows: int = 8,
+    max_warps: int | None = None,
+    backend: str = "pallas",
+) -> jnp.ndarray:
+    if backend == "jnp":
+        return ref.sell_spmv_ref(colidx, values, x)
+    return sell_spmv_pallas(
+        colidx,
+        values,
+        x,
+        cols_per_chunk=cols_per_chunk,
+        block_rows=block_rows,
+        max_warps=max_warps,
+        interpret=_interpret_default(),
+    )

@@ -1,0 +1,124 @@
+"""SELL SpMV Pallas kernel, fused with the coalesced indirect x-access.
+
+Mirrors the paper's VPC pipeline (Sec. II-C) in a single kernel: the grid's
+inner `t` dimension performs the adapter's coalesced wide fetches of the dense
+vector x (one VMEM block per unique wide block per window), and the (s, c)
+dimensions perform the VPC's VMAC consumption of SELL slices — compute and the
+indirect stream overlap exactly as prefetching overlaps compute in the paper.
+
+Layout: padded SELL (n_slices, W, H) with H = slice height (32), W padded to a
+multiple of `cols_per_chunk`. One *window* of the indirect stream = one
+(slice, chunk) = cols_per_chunk * H indices, matching the paper's windowed
+coalescing of the column-index stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coalescer import SENTINEL, build_block_schedule
+
+
+def _kernel(
+    tags_ref,  # scalar-prefetch (n_windows, max_warps)
+    elem_warp_ref,  # (1, 1, window)
+    elem_offset_ref,  # (1, 1, window)
+    values_ref,  # (1, 1, C, H)
+    x_block_ref,  # (1, block_rows) — coalesced wide fetch of x
+    out_ref,  # (1, H)
+    *,
+    block_rows: int,
+    window: int,
+    cols_per_chunk: int,
+    slice_height: int,
+):
+    c = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when((c == 0) & (t == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ew = elem_warp_ref[0, 0, :]
+    eo = elem_offset_ref[0, 0, :]
+    hit = ew == t
+    rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
+    onehot = (hit[:, None] & (eo[:, None] == rows)).astype(x_block_ref.dtype)
+    # Extraction: response-splitter + element-packer as one matvec.
+    gathered = jax.lax.dot(
+        onehot, x_block_ref[0, :][:, None], preferred_element_type=out_ref.dtype
+    )[:, 0]
+    g = gathered.reshape(cols_per_chunk, slice_height)
+    # VPC VMAC: multiply by nonzeros and reduce over the chunk's columns.
+    out_ref[0, :] += jnp.sum(values_ref[0, 0] * g, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cols_per_chunk", "block_rows", "max_warps", "interpret"),
+)
+def sell_spmv_pallas(
+    colidx: jnp.ndarray,  # (n_slices, W, H) int32 (W % cols_per_chunk == 0)
+    values: jnp.ndarray,  # (n_slices, W, H)
+    x: jnp.ndarray,  # (n_cols,)
+    *,
+    cols_per_chunk: int = 8,
+    block_rows: int = 8,
+    max_warps: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns y = A @ x, y: (n_slices * H,). Semantics: ref.sell_spmv_ref."""
+    n_slices, W, H = colidx.shape
+    assert W % cols_per_chunk == 0, (W, cols_per_chunk)
+    n_chunks = W // cols_per_chunk
+    window = cols_per_chunk * H
+    if max_warps is None:
+        max_warps = window
+    # The indirect stream in storage order: slice-by-slice, column-major.
+    stream = colidx.reshape(-1)
+    sched = build_block_schedule(
+        stream, window=window, block_rows=block_rows, max_warps=max_warps
+    )
+    assert sched.n_windows == n_slices * n_chunks
+    tags = jnp.where(sched.tags == SENTINEL, 0, sched.tags)
+    ew = sched.elem_warp.reshape(n_slices, n_chunks, window)
+    eo = sched.elem_offset.reshape(n_slices, n_chunks, window)
+    vals = values.reshape(n_slices, n_chunks, cols_per_chunk, H)
+
+    R = x.shape[0]
+    n_blocks = -(-R // block_rows)
+    x_p = jnp.pad(x, (0, n_blocks * block_rows - R)).reshape(n_blocks, block_rows)
+
+    def tag_of(s, c, t, tags):
+        return (tags[s * n_chunks + c, t], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_slices, n_chunks, max_warps),
+        in_specs=[
+            pl.BlockSpec((1, 1, window), lambda s, c, t, tags: (s, c, 0)),
+            pl.BlockSpec((1, 1, window), lambda s, c, t, tags: (s, c, 0)),
+            pl.BlockSpec(
+                (1, 1, cols_per_chunk, H), lambda s, c, t, tags: (s, c, 0, 0)
+            ),
+            pl.BlockSpec((1, block_rows), tag_of),
+        ],
+        out_specs=pl.BlockSpec((1, H), lambda s, c, t, tags: (s, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            block_rows=block_rows,
+            window=window,
+            cols_per_chunk=cols_per_chunk,
+            slice_height=H,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_slices, H), values.dtype),
+        interpret=interpret,
+    )(tags, ew, eo, vals, x_p)
+    return out.reshape(-1)

@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import (jax locks the
+# device count on first init); hence no `from __future__ import annotations`.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with ZERO device allocation (ShapeDtypeStruct
+inputs only):
+  * compiled.memory_analysis()  — per-device bytes (proves it fits)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective byte counts parsed from the post-SPMD optimized HLO
+and writes one JSON per cell to artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, applicable_shapes, get_arch
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model, build_model, input_specs
+from repro.models.transformer import Runtime
+from repro.optim.optimizer import OptConfig, init_opt_state
+from repro.sharding.rules import (
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    to_shardings,
+)
+from repro.train.steps import make_prefill_step, make_serve_step, make_train_step
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\("
+)
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Sum collective tensor bytes from optimized (post-SPMD) HLO.
+
+    Collectives inside while-loop bodies (layer scans) are multiplied by the
+    loop trip count, recovered from the body's induction-variable compare
+    constant when present."""
+    # map computation name -> trip count for while bodies
+    trip: Dict[str, int] = {}
+    # find while conditions: "%name (param: ...) -> pred[] {" ... constant(N)
+    for m in re.finditer(
+        r"%?([\w.\-]+)[^\n]*->\s*pred\[\][^\n]*\{(.*?)\n\}",
+        hlo_text,
+        re.S,
+    ):
+        body = m.group(2)
+        consts = re.findall(r"constant\((\d+)\)", body)
+        if consts:
+            trip[m.group(1)] = max(int(c) for c in consts)
+    # while ops: condition=%c, body=%b -> body inherits condition's trip count
+    body_trip: Dict[str, int] = {}
+    for m in re.finditer(
+        r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
+        hlo_text,
+    ):
+        body_trip[m.group(2)] = trip.get(m.group(1), 1)
+
+    totals: Dict[str, float] = {}
+    count = 0
+    cur_comp = None
+    cur_mult = 1
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?([\w.\-]+)\s+\([^)]*\)\s*->", line)
+        if line and not line[0].isspace():
+            m2 = re.match(r"%?([\w.\-]+)", line.lstrip("%"))
+            if "{" in line and m2:
+                cur_comp = m2.group(1)
+                cur_mult = body_trip.get(cur_comp, 1)
+        cm = _COLLECTIVE_RE.search(line)
+        if cm:
+            dtype, dims, op = cm.group(1), cm.group(2), cm.group(3)
+            sz = _DTYPE_BYTES.get(dtype, 4)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            totals[op] = totals.get(op, 0.0) + float(sz * n * cur_mult)
+            count += 1
+    totals["total_bytes"] = float(sum(v for k, v in totals.items()))
+    totals["op_count"] = count
+    return totals
+
+
+def _fill_cache_stubs(model: Model, cfg: ArchConfig, cache_shape, cell: ShapeCell):
+    """init_cache leaves enc_out/image_embeds as None (set by the serving
+    layer); replace with ShapeDtypeStructs for lowering."""
+    if cfg.family == "audio":
+        cache_shape["enc_out"] = jax.ShapeDtypeStruct(
+            (cell.global_batch, cell.seq_len, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.family == "vlm":
+        cache_shape["image_embeds"] = jax.ShapeDtypeStruct(
+            (cell.global_batch, cfg.cross_attn.n_image_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype),
+        )
+    return cache_shape
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    error: Optional[str]
+    seconds: float
+    memory: Dict[str, float]
+    cost: Dict[str, float]
+    collectives: Dict[str, Any]
+    runtime: Dict[str, Any]
+
+
+def run_cell(
+    cfg: ArchConfig,
+    cell: ShapeCell,
+    *,
+    multi_pod: bool = False,
+    rt: Optional[Runtime] = None,
+    save: bool = True,
+    tag: str = "baseline",
+    zero1: bool = False,
+    fsdp: bool = False,
+    expert_2d: bool = False,
+) -> CellResult:
+    t0 = time.time()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rt = rt or Runtime(
+        remat="dots" if cell.kind == "train" else "none",
+        scan_layers=True,
+    )
+    model = build_model(cfg)
+    err = None
+    mem: Dict[str, float] = {}
+    cost: Dict[str, float] = {}
+    coll: Dict[str, Any] = {}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        if fsdp:  # ZeRO-3-style: params also sharded over the DP axes
+            from repro.sharding.rules import zero1_pspecs
+
+            p_sh = to_shardings(
+                zero1_pspecs(params_shape, mesh, expert_2d=expert_2d), mesh
+            )
+        else:
+            p_sh = to_shardings(
+                param_pspecs(params_shape, mesh, expert_2d=expert_2d), mesh
+            )
+        batch_shape = input_specs(cfg, cell.global_batch, cell.seq_len)
+        b_sh = to_shardings(batch_pspecs(batch_shape, mesh), mesh)
+
+        with mesh:
+            if cell.kind == "train":
+                opt_shape = jax.eval_shape(init_opt_state, params_shape)
+                from repro.sharding.rules import zero1_pspecs
+
+                moment_specs = (
+                    zero1_pspecs(params_shape, mesh, expert_2d=expert_2d)
+                    if zero1
+                    else param_pspecs(params_shape, mesh, expert_2d=expert_2d)
+                )
+                o_sh = to_shardings(moment_specs, mesh)
+                o_sh = type(opt_shape)(
+                    mu=o_sh, nu=o_sh,
+                    step=to_shardings(
+                        jax.tree.map(lambda _: jax.sharding.PartitionSpec(),
+                                     opt_shape.step), mesh),
+                )
+                step_fn = make_train_step(model, OptConfig(), rt)
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(p_sh, o_sh, b_sh),
+                    out_shardings=(p_sh, o_sh, None),
+                ).lower(params_shape, opt_shape, batch_shape)
+            elif cell.kind == "prefill":
+                step_fn = make_prefill_step(model, rt)
+                lowered = jax.jit(
+                    step_fn, in_shardings=(p_sh, b_sh), out_shardings=None
+                ).lower(params_shape, batch_shape)
+            else:  # decode: one new token against a seq_len cache
+                cache_shape = jax.eval_shape(
+                    lambda: model.init_cache(cell.global_batch, cell.seq_len, rt)
+                )
+                cache_shape = _fill_cache_stubs(model, cfg, cache_shape, cell)
+                c_sh = to_shardings(cache_pspecs(cfg, cache_shape, mesh), mesh)
+                tok_shape = jax.ShapeDtypeStruct(
+                    (cell.global_batch, 1), jnp.int32
+                )
+                t_sh = to_shardings(
+                    batch_pspecs({"tokens": tok_shape}, mesh), mesh
+                )["tokens"]
+                step_fn = make_serve_step(model, rt)
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(p_sh, t_sh, c_sh),
+                    out_shardings=(None, c_sh),
+                ).lower(params_shape, tok_shape, cache_shape)
+
+            compiled = lowered.compile()
+            ma = compiled.memory_analysis()
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            ):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = float(v)
+            ca = compiled.cost_analysis()
+            if ca:
+                cost = {
+                    k: float(v)
+                    for k, v in ca.items()
+                    if isinstance(v, (int, float))
+                    and k in ("flops", "bytes accessed", "optimal_seconds")
+                }
+            coll = collective_bytes_from_hlo(compiled.as_text())
+        ok = True
+    except Exception as e:  # noqa: BLE001 — any failure is a dry-run bug
+        ok = False
+        err = f"{type(e).__name__}: {e}"[:2000]
+    res = CellResult(
+        arch=cfg.name,
+        shape=cell.name,
+        mesh=mesh_name,
+        ok=ok,
+        error=err,
+        seconds=round(time.time() - t0, 1),
+        memory=mem,
+        cost=cost,
+        collectives=coll,
+        runtime={"remat": rt.remat, "scan_layers": rt.scan_layers,
+                 "embed_backend": rt.embed_backend, "tag": tag,
+                 "zero1": zero1, "fsdp": fsdp, "expert_2d": expert_2d, "moe_dp_shards": rt.moe_dp_shards,
+                 "seq_shard_attention": rt.seq_shard_attention},
+    )
+    if save:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        out = ARTIFACTS / f"{cfg.name}__{cell.name}__{mesh_name}__{tag}.json"
+        out.write_text(json.dumps(dataclasses.asdict(res), indent=2))
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", type=str, default="baseline")
+    ap.add_argument(
+        "--unrolled", action="store_true",
+        help="lower with unrolled layers: slower compile, but cost_analysis "
+        "then counts every layer (XLA visits while bodies once) — use for "
+        "the roofline pass",
+    )
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for cfg in ARCHS.values():
+            for cell in applicable_shapes(cfg):
+                cells.append((cfg, cell))
+    else:
+        cfg = get_arch(args.arch)
+        cells.append((cfg, SHAPES_BY_NAME[args.shape]))
+
+    n_fail = 0
+    for cfg, cell in cells:
+        rt = None
+        if args.unrolled:
+            rt = Runtime(
+                remat="dots" if cell.kind == "train" else "none",
+                scan_layers=False,
+            )
+        res = run_cell(cfg, cell, multi_pod=args.multi_pod, tag=args.tag,
+                       rt=rt)
+        status = "OK " if res.ok else "FAIL"
+        flops = res.cost.get("flops", 0)
+        cb = res.collectives.get("total_bytes", 0)
+        print(
+            f"[{status}] {cfg.name:28s} {cell.name:12s} {res.mesh:8s} "
+            f"{res.seconds:7.1f}s flops={flops:.3e} coll={cb:.3e} "
+            f"{res.error or ''}",
+            flush=True,
+        )
+        n_fail += 0 if res.ok else 1
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state. Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis carries
+cross-pod data parallelism (the scarce-bandwidth axis at 1000+ nodes — see
+optim/compression.py for the cross-pod gradient path)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

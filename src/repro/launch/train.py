@@ -1,0 +1,66 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [--reduced]`.
+
+On this CPU container use --reduced (the full configs are exercised via the
+dry-run). On a real TPU fleet the same entry point runs the full config on
+the production mesh."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.models.transformer import Runtime
+from repro.optim.optimizer import OptConfig
+from repro.train.loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", type=str, default="none")
+    ap.add_argument("--embed-backend", type=str, default="jnp",
+                    choices=["jnp", "coalesced", "pallas"])
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    rt = Runtime(remat=args.remat, embed_backend=args.embed_backend)
+    mesh = make_host_mesh() if len(jax.devices()) > 1 else None
+
+    out = train(
+        model,
+        mesh=mesh,
+        rt=rt,
+        opt_cfg=OptConfig(lr=args.lr, total_steps=args.steps),
+        tcfg=TrainConfig(
+            total_steps=args.steps,
+            microbatches=args.microbatches,
+            ckpt_dir=args.ckpt_dir,
+            grad_compression=args.grad_compression,
+        ),
+        data_cfg=DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq,
+            global_batch=args.batch,
+        ),
+    )
+    print(json.dumps({"history": out["history"],
+                      "wall_seconds": out["wall_seconds"]}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

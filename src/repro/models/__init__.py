@@ -1,0 +1,10 @@
+"""Model zoo: 10 assigned architectures as composable functional-JAX models."""
+from .model import (  # noqa: F401
+    Model,
+    build_model,
+    count_params,
+    input_specs,
+    lm_loss,
+    make_input_batch,
+)
+from .transformer import Runtime  # noqa: F401

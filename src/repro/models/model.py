@@ -1,0 +1,115 @@
+"""Unified model interface: build_model(cfg) -> Model with init / forward /
+train-loss / cache / decode. The launch layer (launch/train.py, serve.py)
+and the dry-run lower these under pjit with the sharding rules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .transformer import (
+    Runtime,
+    build_decoder_lm,
+    build_vlm,
+    build_whisper,
+    build_xlstm,
+    build_zamba2,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]  # (key) -> params
+    forward: Callable[..., Any]  # (params, batch, rt) -> (logits, aux)
+    init_cache: Callable[..., Any]  # (batch, max_len, rt) -> cache
+    decode_step: Callable[..., Any]  # (params, tokens, cache, rt) -> (logits, cache)
+    extras: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid", "ssm"):
+        if cfg.family == "hybrid":
+            fns = build_zamba2(cfg)
+        elif cfg.family == "ssm":
+            fns = build_xlstm(cfg)
+        elif cfg.family == "audio":
+            *fns, extras = build_whisper(cfg)
+            return Model(cfg, *fns, extras=extras)
+        elif cfg.family == "vlm":
+            fns = build_vlm(cfg)
+        else:
+            fns = build_decoder_lm(cfg)
+        return Model(cfg, *fns)
+    raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.name}")
+
+
+def lm_loss(
+    model: Model, params, batch: Dict[str, jnp.ndarray], rt: Runtime,
+    aux_weight: float = 0.01,
+) -> jnp.ndarray:
+    """Next-token cross entropy (+ MoE aux loss). batch['tokens'] (B, S);
+    optional batch['loss_mask'] (B, S)."""
+    logits, aux = model.forward(params, batch, rt)  # (B, S, V) f32
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:].astype(jnp.float32)
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    else:
+        loss = nll.mean()
+    return loss + aux_weight * aux
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def make_input_batch(
+    cfg: ArchConfig, batch_size: int, seq_len: int, key=None,
+) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(
+            k1, (batch_size, seq_len), 0, cfg.vocab_size, dtype=jnp.int32
+        )
+    }
+    if cfg.family == "audio":
+        batch["enc_input"] = jax.random.normal(
+            k2, (batch_size, seq_len, cfg.d_model), jnp.float32
+        ) * 0.02
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            k3, (batch_size, cfg.cross_attn.n_image_tokens, cfg.d_model),
+            jnp.float32,
+        ) * 0.02
+    return batch
+
+
+def input_specs(
+    cfg: ArchConfig, batch_size: int, seq_len: int
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — the dry-run's
+    no-allocation batch (see launch/dryrun.py)."""
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32)
+    }
+    if cfg.family == "audio":
+        specs["enc_input"] = jax.ShapeDtypeStruct(
+            (batch_size, seq_len, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.cross_attn.n_image_tokens, cfg.d_model),
+            jnp.float32,
+        )
+    return specs

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts layer with sort-based (coalesced) dispatch.
+
+Token->expert dispatch is an indirect stream: each token's expert assignment
+is a narrow request into the expert's buffer. We apply the paper's mechanism
+— sort the window of requests by target block (= expert), process each
+block's hits together — which on TPU becomes: argsort assignments by expert,
+scatter tokens into a contiguous (E, C, D) buffer (one "wide access" per
+expert slab), run batched expert FFNs, and combine back in original order via
+the carried (warp, offset)=(expert, slot) metadata. Exactly the CSHR
+tag/hitmap/offsets flow, with experts as blocks (DESIGN.md §4).
+
+Under EP, experts (and the (E, C, D) buffer) shard over the 'model' axis while
+tokens shard over 'data'; XLA inserts the all-to-alls at the resharding point.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, ffn_apply, init_ffn
+
+def _constrain(x, spec):
+    """with_sharding_constraint that degrades to a no-op outside a mesh
+    context (single-device tests / examples)."""
+    import jax
+    from jax.sharding import PartitionSpec as _P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, _P(*spec))
+    except (RuntimeError, ValueError):
+        return x
+
+
+
+def init_moe(key, d_model: int, moe, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = moe.n_experts, moe.d_expert
+    p = {
+        "router": _dense_init(ks[0], (d_model, E), dtype, scale=0.02),
+        "w_gate_e": _dense_init(ks[1], (E, d_model, F), dtype),
+        "w_in_e": _dense_init(ks[2], (E, d_model, F), dtype),
+        "w_out_e": _dense_init(ks[3], (E, F, d_model), dtype),
+    }
+    if moe.n_shared:
+        p["shared"] = init_ffn(
+            ks[4], d_model, moe.n_shared * F, dtype, act="silu"
+        )
+    return p
+
+
+def _build_buf(xf, w, idx, *, E, k, C):
+    """Coalescing front half for ONE token shard: sort by expert, scatter into
+    capacity slabs. Returns (buf (E,C,D), slot, in_cap, st, sw, counts)."""
+    T, D = xf.shape
+    # ---- coalesce: sort assignments by expert (block) id
+    flat_e = idx.reshape(-1)  # (T*k,)
+    token_of = jnp.repeat(jnp.arange(T), k)
+    w_flat = w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], token_of[order], w_flat[order]
+
+    counts = jnp.bincount(se, length=E)  # tokens per expert
+    starts = jnp.cumsum(counts) - counts  # first rank of each expert
+    pos = jnp.arange(T * k) - starts[se]  # slot within expert
+    in_cap = pos < C
+    slot = jnp.where(in_cap, se * C + pos, E * C)  # E*C = drop bucket
+
+    # ---- wide access: one contiguous slab per expert
+    buf = jnp.zeros((E * C, D), xf.dtype).at[slot].set(xf[st], mode="drop")
+    return buf.reshape(E, C, D), slot, in_cap, st, sw, counts
+
+
+def _expert_ffn(buf, w_in_e, w_gate_e, w_out_e, lead=""):
+    """Batched expert FFN (SwiGLU). buf: (*lead, E, C, D)."""
+    h = jnp.einsum(f"{lead}ecd,edf->{lead}ecf", buf, w_in_e)
+    g = jnp.einsum(f"{lead}ecd,edf->{lead}ecf", buf, w_gate_e)
+    return jnp.einsum(f"{lead}ecf,efd->{lead}ecd", jax.nn.silu(g) * h, w_out_e)
+
+
+def _combine_one_shard(out, slot, in_cap, st, sw, *, T, E, C):
+    """Back half: response splitter — offsets -> original token order."""
+    D = out.shape[-1]
+    out_flat = out.reshape(E * C, D)
+    gathered = jnp.where(
+        in_cap[:, None], out_flat[jnp.minimum(slot, E * C - 1)], 0.0
+    )
+    return jnp.zeros((T, D), out.dtype).at[st].add(
+        (gathered.astype(jnp.float32) * sw[:, None]).astype(out.dtype)
+    )
+
+
+def _dispatch_one_shard(xf, w, idx, *, E, k, C, w_in_e, w_gate_e, w_out_e):
+    """Full dispatch + expert FFN + combine for ONE token shard."""
+    T = xf.shape[0]
+    buf, slot, in_cap, st, sw, counts = _build_buf(xf, w, idx, E=E, k=k, C=C)
+    out = _expert_ffn(buf, w_in_e, w_gate_e, w_out_e)
+    y = _combine_one_shard(out, slot, in_cap, st, sw, T=T, E=E, C=C)
+    return y, counts
+
+
+def moe_apply(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    moe,
+    capacity_factor: float = 1.25,
+    dp_shards: int = 1,
+    ep_constraint: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss). Capacity-dropped tokens fall back to the shared
+    expert path (or zero for pure-routed MoE).
+
+    dp_shards > 1 = DATA-LOCAL dispatch (beyond-paper optimization, see
+    EXPERIMENTS.md §Perf): tokens are viewed as (dp_shards, T/dp_shards, ...)
+    with the leading dim matching the data-parallel sharding, and the
+    sort/scatter/combine runs vmapped per shard. The coalescing window
+    becomes per-shard (exactly the paper's bounded-window semantics) and XLA
+    keeps the dispatch local to each data shard — only the expert einsum
+    crosses the model axis (all-to-all) instead of a global-sort all-reduce."""
+    B, S, D = x.shape
+    E, k = moe.n_experts, moe.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)  # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    if dp_shards > 1 and T % dp_shards == 0:
+        Tl = T // dp_shards
+        C = max(1, int(capacity_factor * Tl * k / E))
+        buf, slot, in_cap, st, sw, counts = jax.vmap(
+            lambda xs, ws, es: _build_buf(xs, ws, es, E=E, k=k, C=C)
+        )(
+            xf.reshape(dp_shards, Tl, D),
+            w.reshape(dp_shards, Tl, k),
+            idx.reshape(dp_shards, Tl, k),
+        )
+        if ep_constraint:
+            # Pin the EP layout explicitly: token slabs stay data-sharded on
+            # the shard dim while E is model-sharded, so XLA all-to-alls the
+            # (small) token slabs to the expert owners instead of
+            # all-gathering the (huge) expert weights to every data shard.
+            buf = _constrain(buf, ("data", "model", None, None))
+        out = _expert_ffn(buf, p["w_in_e"], p["w_gate_e"], p["w_out_e"],
+                          lead="s")
+        if ep_constraint:
+            out = _constrain(out, ("data", "model", None, None))
+        y = jax.vmap(
+            lambda o, sl, ic, s, w_: _combine_one_shard(
+                o, sl, ic, s, w_, T=Tl, E=E, C=C
+            )
+        )(out, slot, in_cap, st, sw)
+        y = y.reshape(T, D)
+        counts = counts.sum(0)
+    else:
+        C = max(1, int(capacity_factor * T * k / E))
+        y, counts = _dispatch_one_shard(
+            xf, w, idx, E=E, k=k, C=C,
+            w_in_e=p["w_in_e"], w_gate_e=p["w_gate_e"],
+            w_out_e=p["w_out_e"],
+        )
+
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], xf, act="silu")
+
+    # load-balance aux loss (Switch-style)
+    frac_tokens = counts.astype(jnp.float32) / (T * k)
+    frac_probs = probs.mean(0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(B, S, D), aux

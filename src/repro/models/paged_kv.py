@@ -1,0 +1,117 @@
+"""Paged KV cache with block-coalesced page gather.
+
+The paper's wide-block insight maps one-to-one onto paged attention: KV pages
+(block_size tokens) are the wide DRAM blocks; a batch of requests' page
+tables are the index stream; gathering the pages each decode step is the
+indirect access. We coalesce the per-request page reads with the same
+schedule machinery (core.coalescer) — shared-prefix requests hit the same
+pages (CSHR hits = prefix cache reuse, for free).
+
+This is the serving-layer counterpart of the embedding/MoE integration; the
+dense per-layer cache in transformer.py stays the default (XLA-friendlier),
+and paged mode is exercised by tests + examples/serve_paged.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.indirect_stream import coalesced_gather
+
+
+@dataclasses.dataclass
+class PagedKV:
+    """One layer's paged cache.
+
+    pages:      (n_pages, block, n_kv, hd) * 2 (k, v)
+    page_table: (B, max_pages) int32 — physical page per request slot
+    lengths:    (B,) int32 — tokens written per request
+    """
+
+    k_pages: jnp.ndarray
+    v_pages: jnp.ndarray
+    page_table: jnp.ndarray
+    lengths: jnp.ndarray
+    block: int
+
+    @property
+    def n_pages(self) -> int:
+        return self.k_pages.shape[0]
+
+
+def alloc_paged(
+    n_pages: int, block: int, n_kv: int, hd: int, batch: int,
+    max_len: int, dtype=jnp.bfloat16,
+) -> PagedKV:
+    max_pages = -(-max_len // block)
+    # simple static allocator: request b owns pages [b*max_pages, ...)
+    table = (
+        jnp.arange(batch)[:, None] * max_pages + jnp.arange(max_pages)[None, :]
+    ).astype(jnp.int32)
+    assert batch * max_pages <= n_pages, "page pool too small"
+    return PagedKV(
+        k_pages=jnp.zeros((n_pages, block, n_kv, hd), dtype),
+        v_pages=jnp.zeros((n_pages, block, n_kv, hd), dtype),
+        page_table=table,
+        lengths=jnp.zeros((batch,), jnp.int32),
+        block=block,
+    )
+
+
+def append_token(cache: PagedKV, k: jnp.ndarray, v: jnp.ndarray) -> PagedKV:
+    """Write one token's (B, n_kv, hd) k/v into each request's current page."""
+    B = k.shape[0]
+    pos = cache.lengths
+    page_idx = cache.page_table[jnp.arange(B), pos // cache.block]
+    slot = pos % cache.block
+    k_pages = cache.k_pages.at[page_idx, slot].set(k.astype(cache.k_pages.dtype))
+    v_pages = cache.v_pages.at[page_idx, slot].set(v.astype(cache.v_pages.dtype))
+    return dataclasses.replace(
+        cache, k_pages=k_pages, v_pages=v_pages, lengths=pos + 1
+    )
+
+
+def gather_kv(
+    cache: PagedKV, *, window: int = 256, backend: str = "coalesced"
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize (B, max_len, n_kv, hd) k/v via block-coalesced page gather.
+
+    The index stream is the flattened page table; block_rows=1 over the page
+    axis because a PAGE IS the wide block (block coalescing dedups repeated
+    pages across requests — shared prefixes fetch once)."""
+    n_pages, block, n_kv, hd = cache.k_pages.shape
+    B, max_pages = cache.page_table.shape
+    flat = cache.page_table.reshape(-1)
+    kf = cache.k_pages.reshape(n_pages, block * n_kv * hd)
+    vf = cache.v_pages.reshape(n_pages, block * n_kv * hd)
+    gk = coalesced_gather(kf, flat, window=window, block_rows=1, backend=backend)
+    gv = coalesced_gather(vf, flat, window=window, block_rows=1, backend=backend)
+    k = gk.reshape(B, max_pages * block, n_kv, hd)
+    v = gv.reshape(B, max_pages * block, n_kv, hd)
+    return k, v
+
+
+def paged_attention(
+    q: jnp.ndarray,  # (B, 1, H, hd) — decode query
+    cache: PagedKV,
+    *,
+    n_heads: int,
+    backend: str = "coalesced",
+) -> jnp.ndarray:
+    """Single-step decode attention over the paged cache."""
+    B = q.shape[0]
+    k, v = gather_kv(cache, backend=backend)
+    S = k.shape[1]
+    n_kv, hd = k.shape[2], k.shape[3]
+    group = n_heads // n_kv
+    qg = q.reshape(B, 1, n_kv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores * (hd**-0.5)
+    valid = (jnp.arange(S)[None, :] < cache.lengths[:, None])[:, None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, 1, n_heads, hd)

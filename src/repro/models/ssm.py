@@ -1,0 +1,204 @@
+"""Mamba2-style SSD mixer (zamba2's SSM blocks).
+
+Training/prefill uses the chunkwise-parallel SSD algorithm (quadratic inside
+length-`chunk` blocks, linear scan across chunk boundaries) so activation
+memory stays O(S/chunk * H * N * P) instead of O(S * H * N * P); decode is the
+O(1) recurrent update on a carried (H, N, P) state. This mixer is dense and
+regular — the paper's indirect-access technique does not apply to the scan
+itself (DESIGN.md §Arch-applicability); it applies to the arch's embedding and
+shared-attention KV paths.
+
+Shapes: B batch, S seq, H ssm heads, P head_dim, N state_dim, L chunk.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_rmsnorm, rmsnorm_apply
+
+
+def init_mamba2(key, d_model: int, ssm, dtype) -> dict:
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    ks = jax.random.split(key, 5)
+    conv_ch = d_inner + 2 * ssm.state_dim  # x, B, C all pass the causal conv
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": _dense_init(
+            ks[0], (d_model, 2 * d_inner + 2 * ssm.state_dim + n_heads), dtype
+        ),
+        "conv_w": (jax.random.normal(ks[1], (ssm.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),  # a = -exp(a_log)
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((n_heads,), dtype),
+        "out_norm": init_rmsnorm(d_inner, dtype),
+        "w_out": _dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). state: (B, K-1, C) tail
+    of previous tokens (decode). Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else xp[:, :0]
+    return jax.nn.silu(y + b), new_state
+
+
+def _ssd_chunked(
+    xh: jnp.ndarray,  # (B, S, H, P)
+    scale: jnp.ndarray,  # (B, S, H) f32 — input scale (dt for SSD, i-gate for mLSTM)
+    loga: jnp.ndarray,  # (B, S, H) f32 <= 0 — per-token log decay
+    Bm: jnp.ndarray,  # (B, S, N)
+    Cm: jnp.ndarray,  # (B, S, N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunkwise-parallel gated linear recurrence
+        h_t = exp(loga_t) h_{t-1} + scale_t * (B_t (x) x_t);  y_t = C_t . h_t
+    (SSD with decoupled decay/scale — also the mLSTM matrix memory).
+    Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    L = chunk
+    assert S % L == 0, (S, L)
+    nc = S // L
+    xc = xh.reshape(Bsz, nc, L, H, P)
+    dtc = scale.reshape(Bsz, nc, L, H)
+    Bc = Bm.reshape(Bsz, nc, L, N)
+    Cc = Cm.reshape(Bsz, nc, L, N)
+
+    seg = jnp.cumsum(loga.reshape(Bsz, nc, L, H), axis=2)  # cumulative log decay
+
+    # --- intra-chunk (quadratic within L): scores[t,s] = exp(seg_t - seg_s)
+    # * dt_s * (C_t . B_s), s <= t
+    ratio = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    ratio = jnp.where(tri[None, None, :, :, None], ratio, -jnp.inf)
+    dec = jnp.exp(ratio)
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    w = cb[..., None] * dec * dtc[:, :, None, :, :]  # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", w, xc.astype(jnp.float32))
+
+    # --- chunk states: H_c = decay_all * H_{c-1} + sum_s exp(seg_L - seg_s)
+    # dt_s B_s (x) x_s
+    tail = jnp.exp(seg[:, :, -1:, :] - seg)  # (B,nc,L,H)
+    contrib = jnp.einsum(
+        "bcsh,bcsn,bcshp->bchnp",
+        tail * dtc, Bc.astype(jnp.float32), xc.astype(jnp.float32),
+    )  # (B,nc,H,N,P)
+    decay_all = jnp.exp(seg[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(h, inp):
+        d, c = inp  # d: (B,H), c: (B,H,N,P)
+        h_new = h * d[:, :, None, None] + c
+        return h_new, h
+
+    h_init = (
+        jnp.zeros((Bsz, H, N, P), jnp.float32) if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    h_last, h_prevs = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (decay_all.transpose(1, 0, 2), contrib.transpose(1, 0, 2, 3, 4)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P) state BEFORE c
+
+    # --- inter-chunk: y_t += exp(seg_t) * C_t . H_{c-1}
+    y_inter = jnp.einsum(
+        "bctn,bchnp->bcthp", Cc.astype(jnp.float32), h_prevs
+    ) * jnp.exp(seg)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), h_last
+
+
+def mamba2_apply(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    ssm,
+    state: Optional[dict] = None,  # decode: {"conv": (B,K-1,C), "ssd": (B,H,N,P)}
+):
+    """Returns (y, new_state). state=None -> chunked-parallel (train/prefill
+    from scratch); state given -> stateful step(s) (decode)."""
+    Bsz, S, D = x.shape
+    d_inner = ssm.expand * D
+    N, P = ssm.state_dim, ssm.head_dim
+    H = d_inner // P
+
+    zxbcdt = x @ p["w_in"]
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1,
+    )
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xr, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    xh = xr.reshape(Bsz, S, H, P)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+
+    if state is None:
+        L = min(ssm.chunk, S)
+        pad = (-S) % L
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            C_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, B_p, C_p = xh, dtf, Bm, Cm
+        y, h_last = _ssd_chunked(xh_p, dt_p, dt_p * a, B_p, C_p, L)
+        y = y[:, :S]
+    else:
+        # recurrent: assume S small (usually 1)
+        def step(h, inp):
+            xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+            alpha = jnp.exp(dtt * a)  # (B,H)
+            upd = jnp.einsum("bh,bn,bhp->bhnp", dtt, bt.astype(jnp.float32),
+                             xt.astype(jnp.float32))
+            h = h * alpha[:, :, None, None] + upd
+            yt = jnp.einsum("bn,bhnp->bhp", ct.astype(jnp.float32), h)
+            return h, yt
+
+        h_last, ys = jax.lax.scan(
+            step,
+            state["ssd"].astype(jnp.float32),
+            (
+                xh.transpose(1, 0, 2, 3),
+                dtf.transpose(1, 0, 2),
+                Bm.transpose(1, 0, 2),
+                Cm.transpose(1, 0, 2),
+            ),
+        )
+        y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["out_norm"], y * jax.nn.silu(z))
+    out = y @ p["w_out"]
+    new_state = {"conv": new_conv, "ssd": h_last}
+    return out, new_state
+
+
+def mamba2_init_state(Bsz: int, d_model: int, ssm, dtype) -> dict:
+    d_inner = ssm.expand * d_model
+    H, N, P = d_inner // ssm.head_dim, ssm.state_dim, ssm.head_dim
+    conv_ch = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((Bsz, ssm.conv_width - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((Bsz, H, N, P), jnp.float32),
+    }

@@ -1,0 +1,826 @@
+"""Per-family model assembly: stacked-layer (lax.scan) forwards + decode steps.
+
+Every family provides:
+  init(key)                          -> params pytree
+  forward(params, batch, runtime)    -> (logits, aux) for the full sequence
+  init_cache(batch_size, max_len)    -> decode cache pytree
+  prefill(params, batch, cache, rt)  -> (logits_last, cache)
+  decode_step(params, tokens, cache, index, rt) -> (logits, cache)
+
+Layer stacks are scanned over stacked params (compile-time O(1) in depth);
+heterogeneous patterns (hybrid zamba2, MoE interleave, cross-attn every k)
+scan over repeating *units*. Remat policy is applied to the scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution options orthogonal to the architecture."""
+
+    remat: str = "none"  # none | full | dots
+    embed_backend: str = "jnp"  # jnp | coalesced | pallas
+    embed_window: int = 256
+    embed_block_rows: int = 8
+    moe_capacity_factor: float = 1.25
+    cache_dtype: str = "bfloat16"
+    scan_layers: bool = True
+    # beyond-paper perf levers (EXPERIMENTS.md §Perf):
+    moe_dp_shards: int = 1  # data-local MoE dispatch (vmapped per DP shard)
+    moe_ep_constraint: bool = False  # pin EP all-to-all layout on the buffer
+    seq_shard_attention: bool = False  # SP: shard seq over 'model' in attn
+
+
+def _maybe_remat(fn, runtime: Runtime):
+    if runtime.remat == "full":
+        return jax.checkpoint(fn)
+    if runtime.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return fn
+
+
+def _stack_init(init_one: Callable, key, n: int):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _scan_layers(body, x, stacked, runtime: Runtime, cache=None, length=None):
+    """Scan `body(x, (layer_params, layer_cache)) -> (x, new_layer_cache)`
+    over the leading (layer) axis. Returns (x, new_cache)."""
+    wrapped = _maybe_remat(body, runtime)
+    if runtime.scan_layers:
+        xs = (stacked, cache) if cache is not None else (stacked, None)
+
+        def fn(carry, xs_t):
+            p_t, c_t = xs_t
+            return wrapped(carry, (p_t, c_t))
+
+        x, new_cache = jax.lax.scan(fn, x, xs, length=length)
+        return x, new_cache
+    n = length or jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    new_caches = []
+    for i in range(n):
+        p_i = jax.tree.map(lambda a: a[i], stacked)
+        c_i = jax.tree.map(lambda a: a[i], cache) if cache is not None else None
+        x, nc = wrapped(x, (p_i, c_i))
+        new_caches.append(nc)
+    if new_caches and new_caches[0] is not None:
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        new_cache = None
+    return x, new_cache
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _cache_dtype(rt: Runtime):
+    return jnp.dtype(rt.cache_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_layer(cfg: ArchConfig, key, d_ff: Optional[int] = None,
+                      use_moe: bool = False):
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    p: Dict[str, Any] = {
+        "attn_norm": L.init_rmsnorm(cfg.d_model, dt),
+        "ffn_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if cfg.mla is not None:
+        p["attn"] = L.init_mla(ks[0], cfg.d_model, cfg.n_heads, cfg.mla, dt)
+    else:
+        p["attn"] = L.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, dt,
+            qkv_bias=cfg.qkv_bias,
+        )
+    if use_moe:
+        p["moe"] = M.init_moe(ks[1], cfg.d_model, cfg.moe, dt)
+    else:
+        p["ffn"] = L.init_ffn(ks[1], cfg.d_model, d_ff or cfg.d_ff, dt, cfg.act)
+    return p
+
+
+def _apply_dense_layer(
+    cfg: ArchConfig, rt: Runtime, p, x, positions, *,
+    kv_cache=None, cache_index=None, aux_sink=None,
+):
+    """Standard pre-norm decoder layer (GQA or MLA; FFN or MoE).
+    Returns (x, new_kv_cache, aux_loss)."""
+    h = L.rmsnorm_apply(p["attn_norm"], x, cfg.norm_eps)
+    if rt.seq_shard_attention and kv_cache is None and x.shape[1] > 1:
+        # SP for attention: shard the query sequence over 'model' so archs
+        # whose head count doesn't divide the model axis (smollm: 15 heads)
+        # don't replicate the quadratic attention on every model shard.
+        from .moe import _constrain
+
+        h = _constrain(h, (None, "model", None))
+    if cfg.mla is not None:
+        attn_out, new_kv = L.mla_apply(
+            p["attn"], h, n_heads=cfg.n_heads, mla=cfg.mla,
+            positions=positions, rope_theta=cfg.rope_theta,
+            latent_cache=kv_cache, cache_index=cache_index,
+        )
+    else:
+        attn_out, new_kv = L.attention_apply(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, kv_cache=kv_cache,
+            cache_index=cache_index,
+        )
+    x = x + attn_out
+    h = L.rmsnorm_apply(p["ffn_norm"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        ffn_out, aux = M.moe_apply(
+            p["moe"], h, moe=cfg.moe,
+            capacity_factor=rt.moe_capacity_factor,
+            dp_shards=rt.moe_dp_shards,
+            ep_constraint=rt.moe_ep_constraint,
+        )
+    else:
+        ffn_out = L.ffn_apply(p["ffn"], h, cfg.act)
+    return x + ffn_out, new_kv, aux
+
+
+def _empty_kv(cfg: ArchConfig, rt: Runtime, Bsz: int, s_max: int):
+    hd = cfg.resolved_head_dim
+    cdt = _cache_dtype(rt)
+    if cfg.mla is not None:
+        return (
+            jnp.zeros((Bsz, s_max, cfg.mla.kv_lora_rank), cdt),
+            jnp.zeros((Bsz, s_max, cfg.mla.qk_rope_head_dim), cdt),
+        )
+    return (
+        jnp.zeros((Bsz, s_max, cfg.n_kv_heads, hd), cdt),
+        jnp.zeros((Bsz, s_max, cfg.n_kv_heads, hd), cdt),
+    )
+
+
+# ===========================================================================
+# Family: dense (smollm, tinyllama, qwen2, llama3) and moe (deepseek, llama4)
+# ===========================================================================
+
+
+def _moe_layout(cfg: ArchConfig):
+    """Which layers are MoE. Returns (is_moe: list[bool])."""
+    if cfg.moe is None:
+        return [False] * cfg.n_layers
+    out = []
+    for i in range(cfg.n_layers):
+        if i < cfg.moe.first_dense_layers:
+            out.append(False)
+        else:
+            out.append((i - cfg.moe.first_dense_layers)
+                       % cfg.moe.moe_layer_step == 0)
+    return out
+
+
+def build_decoder_lm(cfg: ArchConfig):
+    """Decoder-only LM; supports dense, MoE-interleaved, and MLA variants.
+    Layers are grouped into (leading unrolled dense..., scanned repeating
+    unit) where the unit covers the MoE interleave pattern."""
+    layout = _moe_layout(cfg)
+    n_lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    body_layout = layout[n_lead:]
+    # repeating unit length: moe_layer_step (covers e.g. [moe, dense])
+    unit = cfg.moe.moe_layer_step if cfg.moe else 1
+    assert len(body_layout) % unit == 0, (cfg.name, len(body_layout), unit)
+    n_units = len(body_layout) // unit
+    unit_layout = body_layout[:unit]
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        dt = _dtype(cfg)
+        lead_dff = (cfg.moe.dense_d_ff or cfg.d_ff) if cfg.moe else cfg.d_ff
+        p = {
+            "tok": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+            "lead": [
+                _init_dense_layer(cfg, k, d_ff=lead_dff, use_moe=False)
+                for k in jax.random.split(ks[1], n_lead)
+            ],
+            "units": {
+                f"pos{j}": _stack_init(
+                    lambda k, j=j: _init_dense_layer(
+                        cfg, k,
+                        d_ff=(cfg.moe.dense_d_ff or cfg.d_ff) if cfg.moe else cfg.d_ff,
+                        use_moe=unit_layout[j],
+                    ),
+                    jax.random.fold_in(ks[2], j), n_units,
+                )
+                for j in range(unit)
+            },
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = {
+                "unembed": L._dense_init(ks[3], (cfg.vocab_size, cfg.d_model), dt)
+            }
+        return p
+
+    def _embed(p, tokens, rt: Runtime):
+        return L.embedding_apply(
+            p["tok"], tokens, backend=rt.embed_backend,
+            window=rt.embed_window, block_rows=rt.embed_block_rows,
+        )
+
+    def _run_stack(p, x, positions, rt, cache=None, cache_index=None):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_lead_kv = []
+        for i, lp in enumerate(p["lead"]):
+            kv = cache["lead"][i] if cache is not None else None
+            x, nkv, aux = _apply_dense_layer(
+                cfg, rt, lp, x, positions, kv_cache=kv, cache_index=cache_index
+            )
+            aux_total += aux
+            new_lead_kv.append(nkv)
+        new_units_kv = {}
+        for j in range(unit):
+            stacked = p["units"][f"pos{j}"]
+            ucache = cache["units"][f"pos{j}"] if cache is not None else None
+
+            def body(x, pc, j=j):
+                lp, c = pc
+                x, nkv, aux = _apply_dense_layer(
+                    cfg, rt, lp, x, positions,
+                    kv_cache=c, cache_index=cache_index,
+                )
+                # don't stack fresh KV during training (no cache to update)
+                return x, (nkv if c is not None else None, aux)
+
+            x, (nkv, auxs) = _scan_layers(
+                body, x, stacked, rt, cache=ucache, length=n_units
+            )
+            aux_total += auxs.sum()
+            new_units_kv[f"pos{j}"] = nkv
+        new_cache = (
+            {"lead": new_lead_kv, "units": new_units_kv}
+            if cache is not None else None
+        )
+        return x, new_cache, aux_total
+
+    def forward(p, batch, rt: Runtime):
+        tokens = batch["tokens"]
+        B, Sq = tokens.shape
+        x = _embed(p, tokens, rt)
+        positions = jnp.arange(Sq)[None, :]
+        x, _, aux = _run_stack(p, x, positions, rt)
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        logits = L.logits_apply(p["tok"] if cfg.tie_embeddings else p["unembed"], x)
+        return logits, aux
+
+    def init_cache(Bsz: int, s_max: int, rt: Runtime):
+        return {
+            "lead": [_empty_kv(cfg, rt, Bsz, s_max) for _ in range(n_lead)],
+            "units": {
+                f"pos{j}": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (n_units,) + a.shape
+                    ),
+                    _empty_kv(cfg, rt, Bsz, s_max),
+                )
+                for j in range(unit)
+            },
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(p, tokens, cache, rt: Runtime):
+        """tokens: (B, S_step). Works for prefill (S_step=S) and decode (=1)."""
+        B, Sq = tokens.shape
+        index = cache["index"]
+        x = _embed(p, tokens, rt)
+        positions = index + jnp.arange(Sq)[None, :]
+        x, new_cache, _ = _run_stack(
+            p, x, positions, rt,
+            cache={"lead": cache["lead"], "units": cache["units"]},
+            cache_index=index,
+        )
+        new_cache["index"] = index + Sq
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        logits = L.logits_apply(
+            p["tok"] if cfg.tie_embeddings else p["unembed"], x[:, -1:]
+        )
+        return logits, new_cache
+
+    return init, forward, init_cache, decode_step
+
+
+# ===========================================================================
+# Family: hybrid (zamba2 — Mamba2 stack with a shared attention block)
+# ===========================================================================
+
+
+def build_zamba2(cfg: ArchConfig):
+    ssm = cfg.ssm
+    every = ssm.shared_attn_every
+    n_units = cfg.n_layers // every  # units of `every` mamba + 1 shared attn
+    n_tail = cfg.n_layers - n_units * every
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        dt = _dtype(cfg)
+        return {
+            "tok": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+            "mamba_units": _stack_init(
+                lambda k: _stack_init(
+                    lambda k2: {
+                        "norm": L.init_rmsnorm(cfg.d_model, dt),
+                        "mixer": S.init_mamba2(k2, cfg.d_model, ssm, dt),
+                    },
+                    k, every,
+                ),
+                ks[1], n_units,
+            ),
+            "mamba_tail": _stack_init(
+                lambda k: {
+                    "norm": L.init_rmsnorm(cfg.d_model, dt),
+                    "mixer": S.init_mamba2(k, cfg.d_model, ssm, dt),
+                },
+                ks[2], max(n_tail, 1),
+            ) if n_tail else None,
+            # ONE shared transformer block (weights reused at every call site)
+            "shared": _init_dense_layer(cfg, ks[3], use_moe=False),
+        }
+
+    def _mamba_seq(x, stacked, rt, states, count):
+        def body(x, pc):
+            lp, st = pc
+            h = L.rmsnorm_apply(lp["norm"], x, cfg.norm_eps)
+            out, new_st = S.mamba2_apply(lp["mixer"], h, ssm=ssm, state=st)
+            return x + out, new_st
+
+        return _scan_layers(body, x, stacked, rt, cache=states, length=count)
+
+    def _run(p, x, positions, rt, cache=None, cache_index=None):
+        new_cache: Dict[str, Any] = {"units": [], "shared_kv": [], "tail": None}
+
+        def unit_states(j):
+            if cache is None:
+                return None
+            return jax.tree.map(lambda a: a[j], cache["units"])
+
+        unit_new = []
+        for j in range(n_units):
+            up = jax.tree.map(lambda a: a[j], p["mamba_units"])
+            x, st = _mamba_seq(x, up, rt, unit_states(j), every)
+            kv = cache["shared_kv"][j] if cache is not None else None
+            x_attn, nkv, _ = _apply_dense_layer(
+                cfg, rt, p["shared"], x, positions,
+                kv_cache=kv, cache_index=cache_index,
+            )
+            x = x_attn
+            unit_new.append(st)
+            new_cache["shared_kv"].append(nkv)
+        if unit_new and unit_new[0] is not None:
+            new_cache["units"] = jax.tree.map(lambda *a: jnp.stack(a), *unit_new)
+        if n_tail:
+            tail_states = cache["tail"] if cache is not None else None
+            x, st = _mamba_seq(x, p["mamba_tail"], rt, tail_states, n_tail)
+            new_cache["tail"] = st
+        return x, (new_cache if cache is not None else None)
+
+    def forward(p, batch, rt: Runtime):
+        tokens = batch["tokens"]
+        B, Sq = tokens.shape
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        positions = jnp.arange(Sq)[None, :]
+        x, _ = _run(p, x, positions, rt)
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_apply(p["tok"], x), jnp.zeros((), jnp.float32)
+
+    def init_cache(Bsz: int, s_max: int, rt: Runtime):
+        mk_state = lambda: S.mamba2_init_state(Bsz, cfg.d_model, ssm, _dtype(cfg))
+        return {
+            "units": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_units, every) + a.shape),
+                mk_state(),
+            ),
+            "shared_kv": [
+                _empty_kv(cfg, rt, Bsz, s_max) for _ in range(n_units)
+            ],
+            "tail": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_tail,) + a.shape), mk_state()
+            ) if n_tail else None,
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(p, tokens, cache, rt: Runtime):
+        B, Sq = tokens.shape
+        index = cache["index"]
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        positions = index + jnp.arange(Sq)[None, :]
+        x, new_cache = _run(
+            p, x, positions, rt,
+            cache=cache, cache_index=index,
+        )
+        new_cache["index"] = index + Sq
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_apply(p["tok"], x[:, -1:]), new_cache
+
+    return init, forward, init_cache, decode_step
+
+
+# ===========================================================================
+# Family: ssm (xlstm — mLSTM stack with periodic sLSTM)
+# ===========================================================================
+
+
+def build_xlstm(cfg: ArchConfig):
+    xl = cfg.xlstm
+    every = xl.slstm_every
+    assert cfg.n_layers % every == 0, (cfg.n_layers, every)
+    n_units = cfg.n_layers // every  # unit = (every-1) mLSTM + 1 sLSTM
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        dt = _dtype(cfg)
+        return {
+            "tok": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+            "mlstm": _stack_init(
+                lambda k: _stack_init(
+                    lambda k2: {
+                        "norm": L.init_rmsnorm(cfg.d_model, dt),
+                        "cell": X.init_mlstm(k2, cfg.d_model, xl, dt),
+                    },
+                    k, every - 1,
+                ),
+                ks[1], n_units,
+            ),
+            "slstm": _stack_init(
+                lambda k: {
+                    "norm": L.init_rmsnorm(cfg.d_model, dt),
+                    "cell": X.init_slstm(k, cfg.d_model, cfg.n_heads, xl, dt),
+                },
+                ks[2], n_units,
+            ),
+        }
+
+    def _run(p, x, rt, cache=None):
+        new_cache: Dict[str, Any] = {"mlstm": [], "slstm": []}
+        m_new, s_new = [], []
+        for j in range(n_units):
+            mp = jax.tree.map(lambda a: a[j], p["mlstm"])
+            mstates = (
+                jax.tree.map(lambda a: a[j], cache["mlstm"])
+                if cache is not None else None
+            )
+
+            def body(x, pc):
+                lp, st = pc
+                h = L.rmsnorm_apply(lp["norm"], x, cfg.norm_eps)
+                out, nst = X.mlstm_apply(
+                    lp["cell"], h, n_heads=cfg.n_heads, chunk=xl.chunk, state=st
+                )
+                return x + out, nst
+
+            x, mst = _scan_layers(body, x, mp, rt, cache=mstates, length=every - 1)
+            m_new.append(mst)
+            sp = jax.tree.map(lambda a: a[j], p["slstm"])
+            sstate = (
+                jax.tree.map(lambda a: a[j], cache["slstm"])
+                if cache is not None else None
+            )
+            h = L.rmsnorm_apply(sp["norm"], x, cfg.norm_eps)
+            out, sst = X.slstm_apply(
+                sp["cell"], h, n_heads=cfg.n_heads, state=sstate
+            )
+            x = x + out
+            s_new.append(sst)
+        if cache is not None:
+            new_cache["mlstm"] = jax.tree.map(lambda *a: jnp.stack(a), *m_new)
+            new_cache["slstm"] = jax.tree.map(lambda *a: jnp.stack(a), *s_new)
+            return x, new_cache
+        return x, None
+
+    def forward(p, batch, rt: Runtime):
+        tokens = batch["tokens"]
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        x, _ = _run(p, x, rt)
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_apply(p["tok"], x), jnp.zeros((), jnp.float32)
+
+    def init_cache(Bsz: int, s_max: int, rt: Runtime):
+        m = X.mlstm_init_state(Bsz, cfg.d_model, cfg.n_heads, xl, _dtype(cfg))
+        s = X.slstm_init_state(Bsz, cfg.d_model, cfg.n_heads)
+        return {
+            "mlstm": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_units, every - 1) + a.shape), m
+            ),
+            "slstm": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_units,) + a.shape), s
+            ),
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(p, tokens, cache, rt: Runtime):
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        x, new_cache = _run(p, x, rt, cache=cache)
+        new_cache["index"] = cache["index"] + tokens.shape[1]
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_apply(p["tok"], x[:, -1:]), new_cache
+
+    return init, forward, init_cache, decode_step
+
+
+# ===========================================================================
+# Family: audio (whisper — encoder-decoder, stub conv frontend)
+# ===========================================================================
+
+
+def build_whisper(cfg: ArchConfig):
+    n_enc = cfg.encdec.n_encoder_layers
+    hd = cfg.resolved_head_dim
+
+    def _init_enc_layer(k):
+        ks = jax.random.split(k, 2)
+        dt = _dtype(cfg)
+        return {
+            "attn_norm": L.init_layernorm(cfg.d_model, dt),
+            "attn": L.init_attention(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, dt,
+                qkv_bias=True,
+            ),
+            "ffn_norm": L.init_layernorm(cfg.d_model, dt),
+            "ffn": L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dt, act="gelu"),
+        }
+
+    def _init_dec_layer(k):
+        ks = jax.random.split(k, 3)
+        dt = _dtype(cfg)
+        return {
+            "self_norm": L.init_layernorm(cfg.d_model, dt),
+            "self_attn": L.init_attention(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, dt,
+                qkv_bias=True,
+            ),
+            "cross_norm": L.init_layernorm(cfg.d_model, dt),
+            "cross_attn": L.init_attention(
+                ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, dt,
+                qkv_bias=True,
+            ),
+            "ffn_norm": L.init_layernorm(cfg.d_model, dt),
+            "ffn": L.init_ffn(ks[2], cfg.d_model, cfg.d_ff, dt, act="gelu"),
+        }
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        dt = _dtype(cfg)
+        return {
+            "tok": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "enc_pos": (jax.random.normal(ks[1], (1, 4096, cfg.d_model)) * 0.01).astype(dt),
+            "dec_pos": (jax.random.normal(ks[2], (1, 4096, cfg.d_model)) * 0.01).astype(dt),
+            "enc": _stack_init(_init_enc_layer, ks[3], n_enc),
+            "dec": _stack_init(_init_dec_layer, ks[4], cfg.n_layers),
+            "enc_norm": L.init_layernorm(cfg.d_model, dt),
+            "final_norm": L.init_layernorm(cfg.d_model, dt),
+        }
+
+    def _pos_slice(table, start, length, d):
+        # gather positional rows modulo table length (long inputs wrap)
+        idx = (start + jnp.arange(length)) % table.shape[1]
+        return table[0, idx]
+
+    def encode(p, enc_input, rt: Runtime):
+        """enc_input: (B, S_enc, D) — precomputed frame embeddings (stub
+        frontend; see DESIGN.md)."""
+        B, Se, D = enc_input.shape
+        x = enc_input.astype(_dtype(cfg)) + _pos_slice(p["enc_pos"], 0, Se, D)
+        positions = jnp.arange(Se)[None, :]
+
+        def body(x, pc):
+            lp, _ = pc
+            h = L.layernorm_apply(lp["attn_norm"], x, cfg.norm_eps)
+            full = jnp.ones((1, 1, Se, Se), bool)
+            out, _ = L.attention_apply(
+                lp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=hd, positions=positions, use_rope=False, mask=full,
+            )
+            x = x + out
+            h = L.layernorm_apply(lp["ffn_norm"], x, cfg.norm_eps)
+            return x + L.ffn_apply(lp["ffn"], h, "gelu"), None
+
+        x, _ = _scan_layers(body, x, p["enc"], rt, cache=None, length=n_enc)
+        return L.layernorm_apply(p["enc_norm"], x, cfg.norm_eps)
+
+    def _dec_stack(p, x, positions, enc_out, rt, cache=None, cache_index=None):
+        B = x.shape[0]
+        Se = enc_out.shape[1]
+
+        def body(x, pc):
+            lp, c = pc
+            h = L.layernorm_apply(lp["self_norm"], x, cfg.norm_eps)
+            out, nkv = L.attention_apply(
+                lp["self_attn"], h, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=hd, positions=positions,
+                use_rope=False, kv_cache=c, cache_index=cache_index,
+            )
+            x = x + out
+            h = L.layernorm_apply(lp["cross_norm"], x, cfg.norm_eps)
+            k = (enc_out @ lp["cross_attn"]["wk"] + lp["cross_attn"]["bk"]).reshape(
+                B, Se, cfg.n_kv_heads, hd
+            )
+            v = (enc_out @ lp["cross_attn"]["wv"] + lp["cross_attn"]["bv"]).reshape(
+                B, Se, cfg.n_kv_heads, hd
+            )
+            out, _ = L.attention_apply(
+                lp["cross_attn"], h, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=hd, positions=positions,
+                use_rope=False, kv_override=(k, v),
+                mask=jnp.ones((1, 1, 1, Se), bool),
+            )
+            x = x + out
+            h = L.layernorm_apply(lp["ffn_norm"], x, cfg.norm_eps)
+            return (
+                x + L.ffn_apply(lp["ffn"], h, "gelu"),
+                nkv if c is not None else None,
+            )
+
+        return _scan_layers(body, x, p["dec"], rt, cache=cache,
+                            length=cfg.n_layers)
+
+    def forward(p, batch, rt: Runtime):
+        enc_out = encode(p, batch["enc_input"], rt)
+        tokens = batch["tokens"]
+        B, Sq = tokens.shape
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        x = x + _pos_slice(p["dec_pos"], 0, Sq, cfg.d_model)
+        positions = jnp.arange(Sq)[None, :]
+        x, _ = _dec_stack(p, x, positions, enc_out, rt)
+        x = L.layernorm_apply(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_apply(p["tok"], x), jnp.zeros((), jnp.float32)
+
+    def init_cache(Bsz: int, s_max: int, rt: Runtime):
+        kv = _empty_kv(cfg, rt, Bsz, s_max)
+        return {
+            "self_kv": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), kv
+            ),
+            "enc_out": None,  # filled by prefill (encoder run)
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(p, tokens, cache, rt: Runtime):
+        """Requires cache['enc_out'] (B, Se, D) set by the serving layer."""
+        B, Sq = tokens.shape
+        index = cache["index"]
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        x = x + _pos_slice(p["dec_pos"], index, Sq, cfg.d_model)
+        positions = index + jnp.arange(Sq)[None, :]
+        x, new_kv = _dec_stack(
+            p, x, positions, cache["enc_out"], rt,
+            cache=cache["self_kv"], cache_index=index,
+        )
+        x = L.layernorm_apply(p["final_norm"], x, cfg.norm_eps)
+        new_cache = dict(cache, self_kv=new_kv, index=index + Sq)
+        return L.logits_apply(p["tok"], x[:, -1:]), new_cache
+
+    return init, forward, init_cache, decode_step, {"encode": encode}
+
+
+# ===========================================================================
+# Family: vlm (llama-3.2-vision — cross-attn image layers every k-th layer)
+# ===========================================================================
+
+
+def build_vlm(cfg: ArchConfig):
+    ca = cfg.cross_attn
+    every = ca.every
+    assert cfg.n_layers % every == 0
+    n_units = cfg.n_layers // every  # unit = (every-1) self + 1 cross
+    hd = cfg.resolved_head_dim
+
+    def _init_cross_layer(k):
+        ks = jax.random.split(k, 2)
+        dt = _dtype(cfg)
+        return {
+            "attn_norm": L.init_rmsnorm(cfg.d_model, dt),
+            "xattn": L.init_attention(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd, dt
+            ),
+            "gate_attn": jnp.zeros((), dt),
+            "ffn_norm": L.init_rmsnorm(cfg.d_model, dt),
+            "ffn": L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dt, cfg.act),
+            "gate_ffn": jnp.zeros((), dt),
+        }
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        dt = _dtype(cfg)
+        return {
+            "tok": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+            "self_units": _stack_init(
+                lambda k: _stack_init(
+                    lambda k2: _init_dense_layer(cfg, k2), k, every - 1
+                ),
+                ks[1], n_units,
+            ),
+            "cross": _stack_init(_init_cross_layer, ks[2], n_units),
+            "unembed": {
+                "unembed": L._dense_init(ks[3], (cfg.vocab_size, cfg.d_model), dt)
+            },
+        }
+
+    def _cross_apply(lp, x, img_kv):
+        B = x.shape[0]
+        h = L.rmsnorm_apply(lp["attn_norm"], x, cfg.norm_eps)
+        out, _ = L.attention_apply(
+            lp["xattn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=hd, positions=jnp.zeros((1, x.shape[1]), jnp.int32),
+            use_rope=False, kv_override=img_kv,
+            mask=jnp.ones((1, 1, 1, img_kv[0].shape[1]), bool),
+        )
+        x = x + jnp.tanh(lp["gate_attn"]) * out
+        h = L.rmsnorm_apply(lp["ffn_norm"], x, cfg.norm_eps)
+        return x + jnp.tanh(lp["gate_ffn"]) * L.ffn_apply(lp["ffn"], h, cfg.act)
+
+    def _img_kv(lp, img_embeds):
+        B, Si, D = img_embeds.shape
+        k = (img_embeds @ lp["xattn"]["wk"]).reshape(B, Si, cfg.n_kv_heads, hd)
+        v = (img_embeds @ lp["xattn"]["wv"]).reshape(B, Si, cfg.n_kv_heads, hd)
+        return k, v
+
+    def _run(p, x, positions, img_embeds, rt, cache=None, cache_index=None):
+        new_units = []
+        for j in range(n_units):
+            up = jax.tree.map(lambda a: a[j], p["self_units"])
+            ucache = (
+                jax.tree.map(lambda a: a[j], cache["self_kv"])
+                if cache is not None else None
+            )
+
+            def body(x, pc):
+                lp, c = pc
+                x, nkv, _ = _apply_dense_layer(
+                    cfg, rt, lp, x, positions, kv_cache=c,
+                    cache_index=cache_index,
+                )
+                return x, nkv if c is not None else None
+
+            x, nkv = _scan_layers(body, x, up, rt, cache=ucache, length=every - 1)
+            new_units.append(nkv)
+            clp = jax.tree.map(lambda a: a[j], p["cross"])
+            x = _cross_apply(clp, x, _img_kv(clp, img_embeds))
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "self_kv": jax.tree.map(lambda *a: jnp.stack(a), *new_units)
+            }
+        return x, new_cache
+
+    def forward(p, batch, rt: Runtime):
+        tokens, img = batch["tokens"], batch["image_embeds"]
+        B, Sq = tokens.shape
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        positions = jnp.arange(Sq)[None, :]
+        x, _ = _run(p, x, positions, img.astype(x.dtype), rt)
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_apply(p["unembed"], x), jnp.zeros((), jnp.float32)
+
+    def init_cache(Bsz: int, s_max: int, rt: Runtime):
+        kv = _empty_kv(cfg, rt, Bsz, s_max)
+        return {
+            "self_kv": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_units, every - 1) + a.shape), kv
+            ),
+            "image_embeds": None,  # set by serving layer
+            "index": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_step(p, tokens, cache, rt: Runtime):
+        B, Sq = tokens.shape
+        index = cache["index"]
+        x = L.embedding_apply(p["tok"], tokens, backend=rt.embed_backend)
+        positions = index + jnp.arange(Sq)[None, :]
+        img = cache["image_embeds"].astype(x.dtype)
+        x, nc = _run(
+            p, x, positions, img, rt,
+            cache={"self_kv": cache["self_kv"]}, cache_index=index,
+        )
+        new_cache = dict(cache, self_kv=nc["self_kv"], index=index + Sq)
+        x = L.rmsnorm_apply(p["final_norm"], x, cfg.norm_eps)
+        return L.logits_apply(p["unembed"], x[:, -1:]), new_cache
+
+    return init, forward, init_cache, decode_step

@@ -1,0 +1,204 @@
+"""xLSTM blocks (xlstm-1.3b): mLSTM (matrix memory, chunkwise-parallel) and
+sLSTM (scalar memory, true sequential recurrence with hidden-to-hidden
+weights).
+
+The mLSTM cell
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+is the same gated linear recurrence as SSD with decoupled gates, so the
+training/prefill path reuses ssm._ssd_chunked with k->B, q->C, v->x,
+i-gate->scale, log f-gate->decay; the normalizer n is carried as an extra
+all-ones channel appended to v. Decode is the O(1) recurrent update.
+
+sLSTM is sequential by construction (hidden-to-hidden recurrence R h_{t-1});
+it runs as a lax.scan over time with stabilized exponential gating.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_rmsnorm, rmsnorm_apply
+from .ssm import _causal_conv, _ssd_chunked
+
+_GATE_CLAMP = 12.0  # stabilizes exp input gates within chunks
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, xl, dtype) -> dict:
+    d_inner = int(xl.proj_factor * d_model)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": (jax.random.normal(ks[1], (xl.conv_width, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": _dense_init(ks[2], (d_inner, d_inner), dtype),
+        "wk": _dense_init(ks[3], (d_inner, d_inner), dtype),
+        "wv": _dense_init(ks[4], (d_inner, d_inner), dtype),
+        "w_gates": _dense_init(ks[5], (d_inner, 2), dtype),  # [i, f] per token
+        "gate_bias": jnp.asarray([0.0, 3.0], jnp.float32),  # f-bias > 0
+        "out_norm": init_rmsnorm(d_inner, dtype),
+        "w_down": _dense_init(ks[6], (d_inner, d_model), dtype),
+    }
+
+
+def mlstm_apply(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    n_heads: int,
+    chunk: int,
+    state: Optional[dict] = None,  # {"conv": (B,K-1,C), "mem": (B,H,P,P+1)}
+):
+    Bsz, S, D = x.shape
+    up = x @ p["w_up"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    d_inner = x_in.shape[-1]
+    P = d_inner // n_heads
+
+    conv_state = state["conv"] if state is not None else None
+    cx, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+
+    q = (cx @ p["wq"]).reshape(Bsz, S, n_heads, P)
+    k = (cx @ p["wk"]).reshape(Bsz, S, n_heads, P) * (P**-0.5)
+    v = (x_in @ p["wv"]).reshape(Bsz, S, n_heads, P)
+    gates = (cx @ p["w_gates"]).astype(jnp.float32) + p["gate_bias"]
+    ig = jnp.exp(jnp.clip(gates[..., 0], -_GATE_CLAMP, _GATE_CLAMP))  # (B,S)
+    logf = jax.nn.log_sigmoid(gates[..., 1])  # (B,S) <= 0
+    ig = jnp.broadcast_to(ig[..., None], (Bsz, S, n_heads))
+    logf = jnp.broadcast_to(logf[..., None], (Bsz, S, n_heads))
+
+    # append the all-ones normalizer channel to v
+    v_aug = jnp.concatenate([v, jnp.ones((Bsz, S, n_heads, 1), v.dtype)], -1)
+
+    if state is None:
+        L = min(chunk, S)
+        pad = (-S) % L
+        def padseq(t):
+            return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        # per-head k/q streams: _ssd_chunked takes shared (B,S,N) B/C, so vmap
+        # over heads with N=P.
+        def per_head(vh, kh, qh, igh, logfh):
+            return _ssd_chunked(
+                vh[:, :, None, :], igh[:, :, None], logfh[:, :, None],
+                kh, qh, L,
+            )
+        y_aug, mem = jax.vmap(per_head, in_axes=(2, 2, 2, 2, 2),
+                              out_axes=(2, 1))(
+            padseq(v_aug), padseq(k), padseq(q), padseq(ig), padseq(logf)
+        )  # y_aug: (B, S+pad, H, 1, P+1) ; mem: (B, H, 1, P, P+1)
+        y_aug = y_aug[:, :S, :, 0, :]
+        mem = mem[:, :, 0]
+    else:
+        def step(m, inp):
+            vt, kt, qt, it, ft = inp  # (B,H,P+1),(B,H,P),(B,H,P),(B,H),(B,H)
+            m = m * jnp.exp(ft)[:, :, None, None] + jnp.einsum(
+                "bhp,bhn->bhpn", kt.astype(jnp.float32), vt.astype(jnp.float32)
+            ) * it[:, :, None, None]
+            yt = jnp.einsum("bhp,bhpn->bhn", qt.astype(jnp.float32), m)
+            return m, yt
+
+        mem, ys = jax.lax.scan(
+            step,
+            state["mem"].astype(jnp.float32),
+            (
+                v_aug.transpose(1, 0, 2, 3),
+                k.transpose(1, 0, 2, 3),
+                q.transpose(1, 0, 2, 3),
+                ig.transpose(1, 0, 2),
+                logf.transpose(1, 0, 2),
+            ),
+        )
+        y_aug = ys.transpose(1, 0, 2, 3)
+
+    y, n = y_aug[..., :P], y_aug[..., P]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)[..., None]
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["out_norm"], y) * jax.nn.silu(z)
+    return y @ p["w_down"], {"conv": new_conv, "mem": mem}
+
+
+def mlstm_init_state(Bsz: int, d_model: int, n_heads: int, xl, dtype) -> dict:
+    d_inner = int(xl.proj_factor * d_model)
+    P = d_inner // n_heads
+    return {
+        "conv": jnp.zeros((Bsz, xl.conv_width - 1, d_inner), dtype),
+        "mem": jnp.zeros((Bsz, n_heads, P, P + 1), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int, xl, dtype) -> dict:
+    P = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": _dense_init(ks[0], (d_model, 4 * d_model), dtype),  # i,f,z,o
+        "r_gates": (jax.random.normal(ks[1], (4, n_heads, P, P)) * P**-0.5).astype(dtype),
+        "b_gates": jnp.zeros((4, d_model), jnp.float32),
+        "out_norm": init_rmsnorm(d_model, dtype),
+        "w_up": _dense_init(ks[2], (d_model, 2 * d_model), dtype),
+        "w_down": _dense_init(ks[3], (d_model, d_model), dtype),
+    }
+
+
+def slstm_apply(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    n_heads: int,
+    state: Optional[dict] = None,  # {"h","c","n","m"}: (B, H, P)
+):
+    Bsz, S, D = x.shape
+    P = D // n_heads
+    wx = (x @ p["w_gates"]).reshape(Bsz, S, 4, n_heads, P)
+
+    if state is None:
+        h0 = jnp.zeros((Bsz, n_heads, P), jnp.float32)
+        c0, n0 = jnp.zeros_like(h0), jnp.zeros_like(h0)
+        m0 = jnp.full((Bsz, n_heads, P), -jnp.inf)
+    else:
+        h0, c0, n0, m0 = (state[k] for k in ("h", "c", "n", "m"))
+
+    r = p["r_gates"].astype(jnp.float32)  # (4, H, P, P)
+    b = p["b_gates"].reshape(4, n_heads, P)
+
+    def step(carry, wxt):  # wxt: (B, 4, H, P)
+        h, c, n, m = carry
+        rec = jnp.einsum("ghpq,bhq->bghp", r, h)  # (B,4,H,P)
+        pre = wxt.astype(jnp.float32) + rec + b
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        # first step: m = -inf -> f_p = 0 handled via where
+        f_p = jnp.where(jnp.isinf(m), 0.0, f_p)
+        c = f_p * c + i_p * jnp.tanh(zt)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (h, c, n, m_new), h
+
+    (h, c, n, m), hs = jax.lax.scan(
+        step, (h0, c0, n0, m0), wx.transpose(1, 0, 2, 3, 4)
+    )
+    y = hs.transpose(1, 0, 2, 3).reshape(Bsz, S, D).astype(x.dtype)
+    y = rmsnorm_apply(p["out_norm"], y)
+    up, z = jnp.split(y @ p["w_up"], 2, axis=-1)
+    out = (up * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_init_state(Bsz: int, d_model: int, n_heads: int) -> dict:
+    P = d_model // n_heads
+    z = jnp.zeros((Bsz, n_heads, P), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((Bsz, n_heads, P), -jnp.inf)}

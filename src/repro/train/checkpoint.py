@@ -1,0 +1,156 @@
+"""Fault-tolerant checkpointing: atomic, async, restart- and elastic-safe.
+
+Layout: <dir>/step_<N>/  with one .npy per flattened leaf + manifest.json
+(tree structure, shapes, dtypes, step, completeness marker). Writes go to a
+temp dir and are atomically renamed — a crash mid-save never corrupts the
+latest checkpoint. `restore_latest` skips incomplete/corrupt directories.
+
+Elastic scaling: checkpoints are stored UNSHARDED (gathered); on restore the
+caller re-shards onto whatever mesh exists — so a job can restart on a
+different device count (train/fault_tolerance.py wires this up).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(
+    directory: str | pathlib.Path, step: int, tree: Any, *, keep: int = 3
+) -> pathlib.Path:
+    """Atomic synchronous save. Gathers device arrays to host."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    names, leaves, _ = _flatten_with_names(tree)
+    entries = []
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        entries.append({"name": name, "file": fname, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype)})
+    (tmp / MANIFEST).write_text(
+        json.dumps({"step": step, "leaves": entries, "complete": True})
+    )
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic on POSIX
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: pathlib.Path, keep: int) -> None:
+    ckpts = sorted(directory.glob("step_*"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def list_checkpoints(directory: str | pathlib.Path):
+    directory = pathlib.Path(directory)
+    out = []
+    for d in sorted(directory.glob("step_*")):
+        mf = d / MANIFEST
+        if not mf.exists():
+            continue
+        try:
+            manifest = json.loads(mf.read_text())
+        except json.JSONDecodeError:
+            continue
+        if manifest.get("complete"):
+            out.append((manifest["step"], d))
+    return out
+
+
+def restore_latest(
+    directory: str | pathlib.Path,
+    tree_like: Any,
+    *,
+    shardings: Any = None,
+) -> Optional[Tuple[int, Any]]:
+    """Restore the newest complete checkpoint into `tree_like`'s structure,
+    placing leaves with `shardings` when given (elastic re-shard happens
+    here: the stored arrays are unsharded, the new mesh can be anything).
+    Returns (step, tree) or None."""
+    ckpts = list_checkpoints(directory)
+    if not ckpts:
+        return None
+    step, d = ckpts[-1]
+    manifest = json.loads((d / MANIFEST).read_text())
+    names, leaves, treedef = _flatten_with_names(tree_like)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    if set(names) != set(by_name):
+        raise ValueError(
+            "checkpoint/model structure mismatch: "
+            f"missing={sorted(set(names) - set(by_name))[:5]} "
+            f"extra={sorted(set(by_name) - set(names))[:5]}"
+        )
+    sh_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None
+        else [None] * len(names)
+    )
+    restored = []
+    for name, ref, sh in zip(names, leaves, sh_leaves):
+        arr = np.load(d / by_name[name]["file"])
+        expect = tuple(getattr(ref, "shape", arr.shape))
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"shape mismatch for {name}: {arr.shape} vs {expect}")
+        restored.append(
+            jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+        )
+    return step, jax.tree_util.tree_unflatten(treedef, restored)
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves on a worker thread; at most one in flight (a new
+    request waits for the previous — bounded memory)."""
+
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        # Snapshot to host NOW (device buffers may be donated/mutated next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, keep=self.keep)
+            except BaseException as e:  # surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,47 @@
+"""Step functions lowered by the launcher and the multi-pod dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, lm_loss
+from repro.models.transformer import Runtime
+from repro.optim.optimizer import OptConfig, OptState, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, rt: Runtime):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jnp.ndarray]):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(model, p, batch, rt)
+        )(params)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, rt: Runtime):
+    """(params, batch) -> last-position logits (the inference prefill pass)."""
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, rt)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, rt: Runtime):
+    """(params, tokens, cache) -> (logits, cache): one decode step with a
+    KV/state cache of the cell's seq_len."""
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache, rt)
+
+    return serve_step

@@ -1,0 +1,8 @@
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess/multi-device tests (always run; marker "
+        "allows -m 'not slow' for quick iterations)"
+    )

@@ -1,0 +1,105 @@
+"""Coalescer invariants: the vectorized/parallel schedule must be access-
+equivalent to the step-exact CSHR policy, and schedule-driven gathers must be
+bitwise order-preserving."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.coalescer import (
+    SENTINEL,
+    build_block_schedule,
+    coalesce_stats,
+    cshr_reference_trace,
+    schedule_gather_reference,
+    window_unique_counts,
+)
+
+indices_strategy = st.lists(
+    st.integers(min_value=0, max_value=2000), min_size=1, max_size=600
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(idx=indices_strategy, window=st.sampled_from([4, 16, 64]),
+       block=st.sampled_from([1, 4, 8, 32]))
+def test_cshr_matches_vectorized_access_count(idx, window, block):
+    """Paper Sec II-B policy: wide accesses per window == unique blocks in
+    window (the parallel scan absorbs all hits of each tag)."""
+    idx = np.asarray(idx)
+    trace = cshr_reference_trace(idx, window=window, block_rows=block)
+    counts = window_unique_counts(idx, window=window, block_rows=block)
+    assert len(trace.tags) == counts.sum()
+    # every request served exactly once
+    served = np.zeros(len(idx), dtype=int)
+    for lo, hit in zip(
+        range(0, len(idx), window),
+        [],
+    ):
+        pass
+    pos = 0
+    for w_start in range(0, len(idx), window):
+        w_len = min(window, len(idx) - w_start)
+        hits_here = [h[:w_len] for h in trace.hitmaps[pos:]]
+        # accumulate until all served
+        acc = np.zeros(w_len, dtype=int)
+        used = 0
+        for h in hits_here:
+            acc += h[:w_len]
+            used += 1
+            if acc.all():
+                break
+        assert acc.max() == 1 and acc.min() == 1
+        pos += used
+
+
+@settings(max_examples=50, deadline=None)
+@given(idx=indices_strategy, window=st.sampled_from([8, 32]),
+       block=st.sampled_from([2, 8]))
+def test_schedule_gather_order_preserving(idx, window, block):
+    """The full metadata path (tags/warps/offsets) reproduces table[idx]."""
+    idx = np.asarray(idx, dtype=np.int32)
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.standard_normal((2048, 3)).astype(np.float32))
+    sched = build_block_schedule(jnp.asarray(idx), window=window,
+                                 block_rows=block)
+    out = schedule_gather_reference(table, sched, n_out=len(idx))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(table)[idx])
+
+
+@settings(max_examples=30, deadline=None)
+@given(idx=indices_strategy, block=st.sampled_from([4, 8]))
+def test_larger_window_never_increases_accesses(idx, block):
+    """Coalescing monotonicity: W2 > W1 (W2 % W1 == 0) -> fewer-or-equal wide
+    accesses (each big window is a union of small ones)."""
+    idx = np.asarray(idx)
+    w_small, _ = coalesce_stats(idx, window=32, block_rows=block)
+    w_big, _ = coalesce_stats(idx, window=128, block_rows=block)
+    assert w_big <= w_small
+
+
+def test_schedule_shapes_and_sentinels():
+    idx = jnp.arange(100, dtype=jnp.int32)
+    sched = build_block_schedule(idx, window=32, block_rows=8)
+    assert sched.tags.shape == (4, 32)
+    # 32 consecutive indices span exactly 4 blocks of 8
+    assert int(sched.n_warps[0]) == 4
+    assert bool((sched.tags[0, 4:] == SENTINEL).all())
+    # padding of final window marked invalid
+    assert int(sched.elem_valid.sum()) == 100
+
+
+def test_duplicate_heavy_stream_coalesces_to_one_block():
+    idx = np.full(256, 42)
+    wide, rate = coalesce_stats(idx, window=256, block_rows=8)
+    assert wide == 1
+    assert rate == 256 / 8.0  # heavy reuse -> rate >> 1 (paper Fig. 4)
+
+
+def test_random_stream_rate_low():
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 10_000_000, size=4096)
+    wide, rate = coalesce_stats(idx, window=256, block_rows=8)
+    assert wide >= 4000  # nearly no coalescing
+    assert rate < 0.15

@@ -1,0 +1,62 @@
+"""CSR/SELL format correctness (property-based round trips)."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.formats import (
+    coo_to_csr,
+    csr_to_sell,
+    dense_to_csr,
+    sell_index_stream,
+)
+
+
+@st.composite
+def dense_matrix(draw):
+    r = draw(st.integers(1, 40))
+    c = draw(st.integers(1, 40))
+    seed = draw(st.integers(0, 2**31 - 1))
+    density = draw(st.floats(0.01, 0.5))
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((r, c)) * (rng.random((r, c)) < density)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dense=dense_matrix())
+def test_csr_roundtrip(dense):
+    csr = dense_to_csr(dense)
+    csr.validate()
+    np.testing.assert_allclose(csr.todense(), dense)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dense=dense_matrix(), h=st.sampled_from([2, 8, 32]),
+       wm=st.sampled_from([1, 4]))
+def test_sell_matvec_matches_dense(dense, h, wm):
+    csr = dense_to_csr(dense)
+    sell = csr_to_sell(csr, slice_height=h, width_multiple=wm)
+    sell.validate()
+    x = np.random.default_rng(0).standard_normal(dense.shape[1])
+    y = np.zeros(sell.n_slices * h)
+    stream = sell_index_stream(sell)
+    vals = sell.values
+    for s in range(sell.n_slices):
+        ci, va = sell.slice_arrays(s)
+        y[s * h : (s + 1) * h] = (va * x[ci]).sum(axis=0)
+    np.testing.assert_allclose(y[: csr.n_rows], dense @ x, atol=1e-9)
+
+
+def test_coo_duplicate_coordinates_summed():
+    rows = np.array([0, 0, 1])
+    cols = np.array([1, 1, 0])
+    vals = np.array([2.0, 3.0, 4.0])
+    csr = coo_to_csr(2, 2, rows, cols, vals)
+    np.testing.assert_allclose(
+        csr.todense(), np.array([[0.0, 5.0], [4.0, 0.0]])
+    )
+
+
+def test_sell_width_multiple_padding():
+    dense = np.eye(5)
+    sell = csr_to_sell(dense_to_csr(dense), slice_height=4, width_multiple=8)
+    assert all(w % 8 == 0 for w in sell.slice_widths)

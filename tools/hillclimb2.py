@@ -1,0 +1,36 @@
+"""Hillclimb phase 2: EP layout constraint + FSDP param sharding."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, pathlib
+from repro.configs import ARCHS, SHAPES_BY_NAME
+from repro.launch.dryrun import run_cell
+from repro.models.transformer import Runtime
+
+def show(arch, shape, res):
+    base = json.loads(pathlib.Path(f"artifacts/dryrun/{arch}__{shape}__16x16__baseline.json").read_text())
+    c = res.collectives.get("total_bytes", 0); f = res.cost.get("flops", 0)
+    m = sum(res.memory.get(k,0) for k in ("argument_size_in_bytes","output_size_in_bytes","temp_size_in_bytes"))/2**30
+    bc = base["collectives"].get("total_bytes",1); bf = base["cost"].get("flops",1)
+    bm = sum(base["memory"].get(k,0) for k in ("argument_size_in_bytes","output_size_in_bytes","temp_size_in_bytes"))/2**30
+    print(f"  {res.runtime['tag']:22s} ok={res.ok} flops={f:.3e} coll={c:.3e} mem={m:7.1f}GiB "
+          f"[coll x{c/bc:.3f} mem x{m/bm:.3f} flops x{f/bf:.3f}] ({res.seconds:.0f}s)", flush=True)
+    if not res.ok: print("   ERR:", res.error[:400])
+    if res.ok:
+        print("   colls:", {k: f"{v:.2e}" for k,v in res.collectives.items()})
+
+RUNS = [
+    ("deepseek-v2-lite-16b", "train_4k", "hc5_ep",
+     dict(remat="dots", moe_dp_shards=16, moe_ep_constraint=True), True, False),
+    ("llama4-maverick-400b-a17b", "train_4k", "hc5_ep",
+     dict(remat="dots", moe_dp_shards=16, moe_ep_constraint=True), True, False),
+    ("llama4-maverick-400b-a17b", "train_4k", "hc6_ep_fsdp",
+     dict(remat="dots", moe_dp_shards=16, moe_ep_constraint=True), True, True),
+    ("deepseek-v2-lite-16b", "train_4k", "hc6_ep_fsdp",
+     dict(remat="dots", moe_dp_shards=16, moe_ep_constraint=True), True, True),
+]
+for arch, shape, tag, rtkw, zero1, fsdp in RUNS:
+    print(f"{arch} {shape} -> {tag}", flush=True)
+    res = run_cell(ARCHS[arch], SHAPES_BY_NAME[shape],
+                   rt=Runtime(scan_layers=True, **rtkw), tag=tag,
+                   zero1=zero1, fsdp=fsdp)
+    show(arch, shape, res)

@@ -1,0 +1,36 @@
+"""Hillclimb phase 3: combine best levers; llama4 2D expert sharding."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, pathlib
+from repro.configs import ARCHS, SHAPES_BY_NAME
+from repro.launch.dryrun import run_cell
+from repro.models.transformer import Runtime
+
+def show(arch, shape, res):
+    base = json.loads(pathlib.Path(f"artifacts/dryrun/{arch}__{shape}__16x16__baseline.json").read_text())
+    c = res.collectives.get("total_bytes", 0); f = res.cost.get("flops", 0)
+    m = sum(res.memory.get(k,0) for k in ("argument_size_in_bytes","output_size_in_bytes","temp_size_in_bytes"))/2**30
+    bc = base["collectives"].get("total_bytes",1); bf = base["cost"].get("flops",1)
+    bm = sum(base["memory"].get(k,0) for k in ("argument_size_in_bytes","output_size_in_bytes","temp_size_in_bytes"))/2**30
+    print(f"  {res.runtime['tag']:22s} ok={res.ok} flops={f:.3e} coll={c:.3e} mem={m:7.1f}GiB "
+          f"[coll x{c/bc:.3f} mem x{m/bm:.3f} flops x{f/bf:.3f}] ({res.seconds:.0f}s)", flush=True)
+    if not res.ok: print("   ERR:", res.error[:400])
+    else: print("   colls:", {k: f"{v:.2e}" for k,v in res.collectives.items()})
+
+RT_EP = dict(moe_dp_shards=16, moe_ep_constraint=True)
+RUNS = [
+    # hc7: best-so-far combo + remat full + tight capacity
+    ("deepseek-v2-lite-16b", "train_4k", "hc7_combo",
+     dict(remat="full", moe_capacity_factor=1.0, **RT_EP), dict(zero1=True)),
+    # llama4 hc7: 2D expert sharding (params+moments), EP constraint
+    ("llama4-maverick-400b-a17b", "train_4k", "hc7_expert2d",
+     dict(remat="dots", **RT_EP), dict(zero1=True, expert_2d=True)),
+    ("llama4-maverick-400b-a17b", "train_4k", "hc8_expert2d_rfull",
+     dict(remat="full", moe_capacity_factor=1.0, **RT_EP),
+     dict(zero1=True, expert_2d=True)),
+]
+for arch, shape, tag, rtkw, flags in RUNS:
+    print(f"{arch} {shape} -> {tag}", flush=True)
+    res = run_cell(ARCHS[arch], SHAPES_BY_NAME[shape],
+                   rt=Runtime(scan_layers=True, **rtkw), tag=tag, **flags)
+    show(arch, shape, res)
