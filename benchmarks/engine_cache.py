@@ -1,0 +1,102 @@
+"""Engine schedule-cache microbenchmark: cold plan vs warm plan.
+
+Measures what the content-addressed schedule cache buys on the serving path:
+
+  * ``cold``  — empty caches: engine construction + schedule build + jit
+    compile + one matvec (what every `spmv_sell_coalesced` call paid before
+    the engine existed).
+  * ``warm``  — same matrix again through `get_engine`: engine-cache hit, the
+    compiled matvec executes immediately.
+  * ``plan_only`` / ``plan_cached`` — schedule construction in isolation, miss
+    vs content-addressed hit.
+
+The warm path must be strictly faster than the cold path — that delta is the
+amortized per-call cost the plan-once engine removes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import (
+    cached_block_schedule,
+    clear_engine_cache,
+    clear_schedule_cache,
+    get_engine,
+    schedule_cache_stats,
+)
+from repro.core.formats import csr_to_sell
+from repro.core.matrices import banded
+
+from .common import emit, timed
+
+N_ROWS = {"ci": 2048, "bench": 16384, "paper": 131072}
+
+
+def run() -> dict:
+    import jax.numpy as jnp
+
+    from .common import SCALE
+
+    n = N_ROWS.get(SCALE, 16384)
+    csr = banded(n, 24, 0.8)(np.random.default_rng(0))
+    sell = csr_to_sell(csr)
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal(sell.n_cols).astype(np.float32)
+    )
+
+    clear_engine_cache()
+    clear_schedule_cache()
+
+    def cold():
+        clear_engine_cache()
+        clear_schedule_cache()
+        return get_engine(sell).matvec(x).block_until_ready()
+
+    _, cold_us = timed(cold)
+
+    # Warm the caches once, then measure the steady-state serving path.
+    get_engine(sell).matvec(x).block_until_ready()
+
+    def warm():
+        return get_engine(sell).matvec(x).block_until_ready()
+
+    _, warm_us = timed(warm, repeats=5)
+
+    # Schedule construction in isolation (miss vs content-addressed hit).
+    stream = get_engine(sell)._ensure_padded()[1]
+    clear_schedule_cache()
+    _, plan_us = timed(
+        lambda: cached_block_schedule(stream, window=256, block_rows=8)
+    )
+    _, plan_hit_us = timed(
+        lambda: cached_block_schedule(stream, window=256, block_rows=8),
+        repeats=5,
+    )
+
+    speedup = cold_us / max(warm_us, 1e-9)
+    emit("engine_cache/cold_plan_matvec", cold_us, f"n={n};nnz={csr.nnz}")
+    emit(
+        "engine_cache/warm_plan_matvec", warm_us,
+        f"n={n};speedup_vs_cold={speedup:.1f}x",
+    )
+    emit("engine_cache/schedule_build", plan_us, f"stream={stream.size}")
+    emit(
+        "engine_cache/schedule_cache_hit", plan_hit_us,
+        f"stats={schedule_cache_stats()}".replace(",", ";"),
+    )
+    assert warm_us < cold_us, (
+        f"warm-plan matvec ({warm_us:.1f}us) must beat cold-plan "
+        f"({cold_us:.1f}us)"
+    )
+    return {
+        "cold_us": cold_us,
+        "warm_us": warm_us,
+        "plan_us": plan_us,
+        "plan_hit_us": plan_hit_us,
+        "speedup": speedup,
+    }
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

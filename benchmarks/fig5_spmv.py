@@ -1,11 +1,15 @@
 """Paper Fig. 5: end-to-end SpMV on the four vector-processor systems
 (base / pack0 / pack64 / pack256): speedups, indirect-access share, off-chip
-traffic, memory utilization. Claims C5-C6."""
+traffic, memory utilization. Claims C5-C6.
+
+Predictions come from `SpMVEngine.perf` — each matrix gets one engine (plan
+built once, shared via the engine cache with every other benchmark touching
+the same suite) and all four system models run against that plan."""
 from __future__ import annotations
 
 import statistics
 
-from repro.core.perfmodel import spmv_perf
+from repro.core.engine import get_engine
 
 from .common import emit, sell_suite
 
@@ -15,8 +19,9 @@ SYSTEMS = ("base", "pack0", "pack64", "pack256")
 def run() -> dict:
     rows = {}
     for name, sell in sell_suite().items():
+        engine = get_engine(sell)
         for system in SYSTEMS:
-            r = spmv_perf(sell, system)
+            r = engine.perf(system)
             rows[(name, system)] = r
             emit(
                 f"fig5/{name}/{system}",

@@ -1,8 +1,11 @@
 """Benchmark harness: one module per paper figure/table. Prints
 ``name,us_per_call,derived`` CSV rows. `BENCH_SCALE=ci|bench|paper` controls
-matrix sizes (default bench)."""
+matrix sizes (default bench). ``--smoke`` forces the tiny ci scale and runs a
+quick subset (fig5 + engine cache + kernel microbench) — the CI fast pass."""
 from __future__ import annotations
 
+import argparse
+import os
 import time
 
 import numpy as np
@@ -40,14 +43,33 @@ def _kernel_microbench() -> None:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="quick CI pass: ci-scale matrices, fig5 + engine cache + kernels",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["BENCH_SCALE"] = "ci"  # before .common reads it
+
     t0 = time.time()
-    from . import fig3_indirect_stream, fig4_breakdown, fig5_spmv, fig6_efficiency
+    from . import engine_cache, fig5_spmv
 
     print("name,us_per_call,derived")
+    if args.smoke:
+        fig5_spmv.run()
+        engine_cache.run()
+        _kernel_microbench()
+        print(f"# total {time.time() - t0:.1f}s (smoke)")
+        return
+
+    from . import fig3_indirect_stream, fig4_breakdown, fig6_efficiency
+
     fig3_indirect_stream.run()
     fig4_breakdown.run()
     fig5_spmv.run()
     fig6_efficiency.run()
+    engine_cache.run()
     _kernel_microbench()
     try:
         from . import roofline

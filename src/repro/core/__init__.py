@@ -18,6 +18,16 @@ from .formats import (  # noqa: F401
     csr_to_sell,
     dense_to_csr,
 )
+from .engine import (  # noqa: F401
+    SpMVEngine,
+    cached_block_schedule,
+    clear_engine_cache,
+    clear_schedule_cache,
+    engine_cache_stats,
+    get_engine,
+    schedule_cache_stats,
+    stream_digest,
+)
 from .indirect_stream import coalesced_gather  # noqa: F401
 from .perfmodel import (  # noqa: F401
     DEFAULT_HW,

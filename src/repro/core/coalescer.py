@@ -170,6 +170,16 @@ class BlockSchedule:
         return int(self.tags.shape[1])
 
 
+jax.tree_util.register_pytree_node(
+    BlockSchedule,
+    lambda s: (
+        (s.tags, s.n_warps, s.elem_warp, s.elem_offset, s.elem_valid),
+        (s.window, s.block_rows),
+    ),
+    lambda aux, children: BlockSchedule(*children, *aux),
+)
+
+
 def _schedule_one_window(win: jnp.ndarray, block_rows: int, max_warps: int):
     blocks = win // block_rows
     tags, n = _unique_padded(blocks, max_warps)
@@ -209,6 +219,45 @@ def build_block_schedule(
         elem_valid=valid.reshape(n_windows, window),
         window=window,
         block_rows=block_rows,
+    )
+
+
+def resolve_schedule(
+    indices: jnp.ndarray,
+    *,
+    window: int,
+    block_rows: int,
+    max_warps: int | None = None,
+    schedule: BlockSchedule | None = None,
+) -> Tuple[BlockSchedule, int]:
+    """Shared prebuilt-vs-build schedule resolution for kernels and gather
+    sites. Returns ``(schedule, max_warps)``.
+
+    A prebuilt `schedule` must have been built for this exact plan geometry
+    *and* this stream's length — a schedule for a different stream would
+    silently gather the wrong elements, so mismatches raise."""
+    n = int(indices.shape[0])
+    if schedule is not None:
+        if schedule.window != window or schedule.block_rows != block_rows:
+            raise ValueError(
+                f"schedule was planned for (window={schedule.window}, "
+                f"block_rows={schedule.block_rows}), call expects "
+                f"(window={window}, block_rows={block_rows})"
+            )
+        expected_windows = max(1, -(-n // window))
+        if schedule.n_windows != expected_windows:
+            raise ValueError(
+                f"schedule covers {schedule.n_windows} windows but a "
+                f"{n}-element stream needs {expected_windows}"
+            )
+        return schedule, schedule.max_warps
+    if max_warps is None:
+        max_warps = window
+    return (
+        build_block_schedule(
+            indices, window=window, block_rows=block_rows, max_warps=max_warps
+        ),
+        max_warps,
     )
 
 

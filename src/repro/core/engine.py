@@ -1,0 +1,364 @@
+"""Batched SpMV execution engine: plan once, execute many.
+
+The paper's preprocessing split (Sec. III: format conversion and coalescer
+metadata are built offline, the data path then streams) maps poorly onto a
+library whose entry points rebuild the `BlockSchedule` on every call. This
+module makes the plan a first-class, cached object:
+
+  * `cached_block_schedule` — content-addressed schedule cache. The key is the
+    SHA-256 digest of the index-stream bytes plus (window, block_rows,
+    max_warps); two matrices with byte-identical column-index streams share
+    one schedule object, and repeat plans return the *same* object (identity,
+    not just equality) so jit caches keyed on it stay warm.
+  * `SpMVEngine` — owns one matrix (CSR is converted to SELL up front,
+    validated), one schedule, and jit-compiled `matvec(x)` / batched
+    `matmat(X)` closures that reuse the schedule across thousands of
+    right-hand sides. `matmat` is `vmap` over RHS columns: one schedule, one
+    compiled program, k columns.
+  * `get_engine` — engine-level cache (keyed on matrix content + plan params)
+    so ad-hoc call sites (`spmv_sell_coalesced`, serving loops) hit warm
+    compiled paths without threading engine handles around.
+  * `SpMVEngine.plan_report()` — surfaces `coalesce_stats` and the cycle-level
+    perf-model predictions for the plan, so callers can inspect what the
+    adapter would do with this stream before committing to a variant.
+
+Cache sizes are bounded (LRU) — schedules for big matrices hold O(nnz)
+metadata and serving processes are long-lived.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coalescer import BlockSchedule, build_block_schedule, coalesce_stats, \
+    schedule_gather_reference
+from .formats import CSRMatrix, SELLMatrix, csr_to_sell
+from .perfmodel import DEFAULT_HW, HWConfig, spmv_perf
+
+# ---------------------------------------------------------------------------
+# Content-addressed schedule cache
+# ---------------------------------------------------------------------------
+
+_SCHEDULE_CACHE_MAX = 64
+_ENGINE_CACHE_MAX = 32  # > the 20-matrix benchmark suite, so one pass fits
+
+
+class _LRUCache:
+    """Tiny bounded LRU with hit/miss counters (OrderedDict-backed)."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: "OrderedDict[object, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+_schedule_cache = _LRUCache(_SCHEDULE_CACHE_MAX)
+_engine_cache = _LRUCache(_ENGINE_CACHE_MAX)
+
+
+def stream_digest(indices: np.ndarray) -> str:
+    """SHA-256 of an index stream's bytes (plus shape/dtype, so e.g. an int32
+    and an int64 view of the same bytes don't collide)."""
+    arr = np.ascontiguousarray(np.asarray(indices))
+    h = hashlib.sha256()
+    h.update(str((arr.shape, arr.dtype.str)).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def cached_block_schedule(
+    indices: np.ndarray,
+    *,
+    window: int,
+    block_rows: int,
+    max_warps: Optional[int] = None,
+) -> Tuple[BlockSchedule, bool]:
+    """Build (or fetch) the coalescer schedule for an index stream.
+
+    Returns ``(schedule, was_cached)``. Repeat calls with a byte-identical
+    stream and the same plan parameters return the identical schedule object.
+    """
+    key = (stream_digest(indices), window, block_rows, max_warps)
+    sched = _schedule_cache.get(key)
+    if sched is not None:
+        return sched, True
+    sched = build_block_schedule(
+        jnp.asarray(np.asarray(indices, dtype=np.int32)),
+        window=window,
+        block_rows=block_rows,
+        max_warps=max_warps,
+    )
+    # Materialize now: the cache must hand out ready metadata, not lazy traces.
+    sched = jax.tree_util.tree_map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a,
+        sched,
+    )
+    _schedule_cache.put(key, sched)
+    return sched, False
+
+
+def schedule_cache_stats() -> Dict[str, int]:
+    return {
+        "size": len(_schedule_cache),
+        "hits": _schedule_cache.hits,
+        "misses": _schedule_cache.misses,
+    }
+
+
+def clear_schedule_cache() -> None:
+    _schedule_cache.clear()
+
+
+def clear_engine_cache() -> None:
+    _engine_cache.clear()
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def _sell_content_digest(sell: SELLMatrix) -> str:
+    """Content digest of a SELL matrix, memoized on the instance — hashing
+    O(nnz) bytes per `get_engine` lookup would put the cost the engine exists
+    to amortize right back on the hot path. Mutating a SELLMatrix's arrays
+    in place after the first digest is not supported (treat them as frozen,
+    like every consumer of the format does)."""
+    cached = getattr(sell, "_content_digest", None)
+    if cached is not None:
+        return cached
+    h = hashlib.sha256()
+    h.update(
+        str((sell.n_rows, sell.n_cols, sell.slice_height)).encode()
+    )
+    for arr in (sell.slice_ptrs, sell.slice_widths, sell.colidx, sell.values):
+        a = np.ascontiguousarray(np.asarray(arr))
+        h.update(str((a.shape, a.dtype.str)).encode())
+        h.update(a.tobytes())
+    digest = h.hexdigest()
+    sell._content_digest = digest
+    return digest
+
+
+def _check_sell_plan_params(
+    sell: SELLMatrix, slice_height: Optional[int], width_multiple: int
+) -> None:
+    """slice_height/width_multiple steer CSR->SELL conversion; for an
+    already-built SELL they can only be honored if the matrix already
+    satisfies them — silently ignoring a mismatch would hand back a plan
+    with different geometry than the caller asked for."""
+    if slice_height is not None and slice_height != sell.slice_height:
+        raise ValueError(
+            f"matrix is already SELL with slice_height={sell.slice_height}; "
+            f"cannot re-slice to {slice_height} (convert from CSR instead)"
+        )
+    if width_multiple != 1 and np.any(
+        np.asarray(sell.slice_widths) % width_multiple
+    ):
+        raise ValueError(
+            f"matrix is already SELL and its slice widths are not multiples "
+            f"of {width_multiple} (convert from CSR instead)"
+        )
+
+
+class SpMVEngine:
+    """Plan-once / execute-many SpMV over the coalesced data path.
+
+    ``matrix`` may be CSR (converted to SELL here — the offline preprocessing
+    step) or an already-built SELL. The constructor validates the format,
+    pads the SELL slices once, and plans the coalescer schedule through the
+    content-addressed cache. `matvec`/`matmat` then only execute.
+    """
+
+    def __init__(
+        self,
+        matrix: Union[CSRMatrix, SELLMatrix],
+        *,
+        window: int = 256,
+        block_rows: int = 8,
+        slice_height: Optional[int] = None,
+        width_multiple: int = 1,
+    ):
+        if isinstance(matrix, CSRMatrix):
+            matrix.validate()
+            kw = {} if slice_height is None else {"slice_height": slice_height}
+            sell = csr_to_sell(matrix, width_multiple=width_multiple, **kw)
+        elif isinstance(matrix, SELLMatrix):
+            _check_sell_plan_params(matrix, slice_height, width_multiple)
+            sell = matrix
+            sell.validate()
+        else:
+            raise TypeError(f"expected CSRMatrix or SELLMatrix, got {type(matrix)}")
+        self.sell = sell
+        self.window = int(window)
+        self.block_rows = int(block_rows)
+        # Planning is lazy: perf-model queries (`perf`) never pay for padding,
+        # schedule construction, or compilation — only execution does.
+        self._padded = None  # (values (n_slices, W, H), stream, W)
+        self._schedule: Optional[BlockSchedule] = None
+        self.plan_cached: Optional[bool] = None  # set when the plan is built
+        self._matvec = None
+        self._matmat = None
+
+    # -- planning ----------------------------------------------------------
+
+    def _ensure_padded(self):
+        if self._padded is None:
+            from .spmv import _sell_padded  # local: spmv routes through engine
+
+            ci, va, W = _sell_padded(self.sell)
+            self._padded = (va, np.ascontiguousarray(ci.reshape(-1)), W)
+        return self._padded
+
+    @property
+    def schedule(self) -> BlockSchedule:
+        """The coalescer plan (content-addressed cache; built on first use)."""
+        if self._schedule is None:
+            _, stream, _ = self._ensure_padded()
+            self._schedule, self.plan_cached = cached_block_schedule(
+                stream, window=self.window, block_rows=self.block_rows
+            )
+        return self._schedule
+
+    def _ensure_compiled(self):
+        if self._matvec is None:
+            va, stream, W = self._ensure_padded()
+            sched = self.schedule
+            sell = self.sell
+            n_slices, H = sell.n_slices, sell.slice_height
+            n_rows, n_out = sell.n_rows, stream.shape[0]
+
+            def _matvec(x: jnp.ndarray) -> jnp.ndarray:
+                gathered = schedule_gather_reference(
+                    x[:, None], sched, n_out=n_out
+                )
+                g = gathered[:, 0].reshape(n_slices, W, H)
+                y = jnp.sum(jnp.asarray(va, x.dtype) * g, axis=1)
+                return y.reshape(-1)[:n_rows]
+
+            self._matvec = jax.jit(_matvec)
+            self._matmat = jax.jit(jax.vmap(_matvec, in_axes=1, out_axes=1))
+        return self._matvec, self._matmat
+
+    # -- execution ---------------------------------------------------------
+
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """y = A @ x through the cached coalesced plan. x: (n_cols,)."""
+        x = jnp.asarray(x)
+        if x.ndim != 1 or x.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"matvec expects x of shape ({self.sell.n_cols},), got {x.shape}"
+            )
+        mv, _ = self._ensure_compiled()
+        return mv(x)
+
+    def matmat(self, X: jnp.ndarray) -> jnp.ndarray:
+        """Y = A @ X for X: (n_cols, k) — vmapped over RHS columns, one
+        schedule shared by all k. Bit-identical per column to `matvec`."""
+        X = jnp.asarray(X)
+        if X.ndim != 2 or X.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"matmat expects X of shape ({self.sell.n_cols}, k), got {X.shape}"
+            )
+        _, mm = self._ensure_compiled()
+        return mm(X)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.matvec(x) if jnp.asarray(x).ndim == 1 else self.matmat(x)
+
+    # -- introspection -----------------------------------------------------
+
+    def perf(self, system: str, hw: HWConfig = DEFAULT_HW):
+        """Cycle-level perf-model prediction for this matrix on one system
+        ('base' | 'pack0' | 'pack64' | 'pack256')."""
+        return spmv_perf(self.sell, system, hw)
+
+    def plan_report(self, hw: HWConfig = DEFAULT_HW) -> Dict[str, object]:
+        """The plan, inspectable: stream/coalescer stats + model predictions.
+        Forces planning (this reports on the actual plan, not an estimate)."""
+        sched = self.schedule
+        _, stream, W = self._ensure_padded()
+        wide, rate = coalesce_stats(
+            stream, window=self.window, block_rows=self.block_rows
+        )
+        report: Dict[str, object] = {
+            "n_rows": self.sell.n_rows,
+            "n_cols": self.sell.n_cols,
+            "nnz_padded": self.sell.nnz_padded,
+            "slice_height": self.sell.slice_height,
+            "padded_width": W,
+            "window": self.window,
+            "block_rows": self.block_rows,
+            "n_windows": sched.n_windows,
+            "max_warps": sched.max_warps,
+            "schedule_cached": self.plan_cached,
+            "wide_accesses": wide,
+            "coalesce_rate": rate,
+            "perf": {
+                system: dataclasses.asdict(self.perf(system, hw))
+                for system in ("base", "pack0", "pack256")
+            },
+        }
+        return report
+
+
+def get_engine(
+    matrix: Union[CSRMatrix, SELLMatrix],
+    *,
+    window: int = 256,
+    block_rows: int = 8,
+    slice_height: Optional[int] = None,
+    width_multiple: int = 1,
+) -> SpMVEngine:
+    """Engine cache: same matrix content + plan params -> same engine (and
+    therefore same compiled matvec/matmat). CSR inputs are keyed on the SELL
+    they convert to, so CSR and its converted SELL share an engine."""
+    if isinstance(matrix, CSRMatrix):
+        matrix.validate()
+        kw = {} if slice_height is None else {"slice_height": slice_height}
+        matrix = csr_to_sell(matrix, width_multiple=width_multiple, **kw)
+    else:
+        _check_sell_plan_params(matrix, slice_height, width_multiple)
+    key = (_sell_content_digest(matrix), window, block_rows)
+    eng = _engine_cache.get(key)
+    if eng is None:
+        eng = SpMVEngine(matrix, window=window, block_rows=block_rows)
+        _engine_cache.put(key, eng)
+    return eng
+
+
+def engine_cache_stats() -> Dict[str, int]:
+    return {
+        "size": len(_engine_cache),
+        "hits": _engine_cache.hits,
+        "misses": _engine_cache.misses,
+    }

@@ -18,7 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .coalescer import build_block_schedule, schedule_gather_reference
+from .coalescer import resolve_schedule, schedule_gather_reference
 
 
 @partial(jax.jit, static_argnames=("window", "block_rows", "backend"))
@@ -29,22 +29,28 @@ def coalesced_gather(
     window: int = 256,
     block_rows: int = 8,
     backend: str = "coalesced",
+    schedule=None,
 ) -> jnp.ndarray:
     """Gather rows of `table` (R, D) at `indices` (...,) -> (..., D).
 
     window/block_rows mirror the paper's W and wide-block granularity; for
-    TPU, block_rows*D*itemsize should be a multiple of the (8,128) tile."""
+    TPU, block_rows*D*itemsize should be a multiple of the (8,128) tile.
+    A prebuilt `schedule` for the flattened index stream (see
+    core.engine.cached_block_schedule) skips per-call plan construction."""
     flat = indices.reshape(-1)
     if backend == "jnp":
         out = table[flat]
     elif backend == "coalesced":
-        sched = build_block_schedule(flat, window=window, block_rows=block_rows)
+        sched, _ = resolve_schedule(
+            flat, window=window, block_rows=block_rows, schedule=schedule
+        )
         out = schedule_gather_reference(table, sched, n_out=flat.shape[0])
     elif backend == "pallas":
         from repro.kernels import ops as kops
 
         out = kops.coalesced_gather(
-            table, flat, window=window, block_rows=block_rows
+            table, flat, window=window, block_rows=block_rows,
+            schedule=schedule,
         )
     else:
         raise ValueError(f"unknown backend {backend!r}")

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .coalescer import build_block_schedule, schedule_gather_reference
 from .formats import CSRMatrix, SELLMatrix
 
 
@@ -60,14 +59,11 @@ def spmv_sell_coalesced(
 ) -> jnp.ndarray:
     """SELL SpMV through the coalesced indirect-stream data path (paper
     Fig. 1 BR): identical result to `spmv_sell`, but every x access goes
-    through window->warp coalescing + wide-block fetch + offset extraction."""
-    ci, va, W = _sell_padded(sell)
-    H = sell.slice_height
-    stream = jnp.asarray(ci.reshape(-1))  # storage-order index stream
-    sched = build_block_schedule(stream, window=window, block_rows=block_rows)
-    gathered = schedule_gather_reference(
-        x[:, None], sched, n_out=stream.shape[0]
-    )[:, 0]
-    gathered = gathered.reshape(sell.n_slices, W, H)
-    y = jnp.sum(jnp.asarray(va, x.dtype) * gathered, axis=1)
-    return y.reshape(-1)[: sell.n_rows]
+    through window->warp coalescing + wide-block fetch + offset extraction.
+
+    Routed through the engine cache (core.engine): repeat calls on the same
+    matrix reuse one coalescer schedule and one compiled executable instead of
+    re-planning per call."""
+    from .engine import get_engine  # local import: engine builds on this module
+
+    return get_engine(sell, window=window, block_rows=block_rows).matvec(x)

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.coalescer import SENTINEL, build_block_schedule
+from repro.core.coalescer import BlockSchedule, SENTINEL, resolve_schedule
 
 
 def _kernel(
@@ -68,6 +68,7 @@ def coalesced_gather_pallas(
     window: int = 256,
     block_rows: int = 8,
     max_warps: int | None = None,
+    schedule: BlockSchedule | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Gather `table[indices]` through the coalesced data path.
@@ -78,14 +79,15 @@ def coalesced_gather_pallas(
     max_warps bounds unique blocks per window (defaults to the always-safe
     `window`); smaller values shrink the grid when the caller knows the
     stream's locality (asserted at schedule build when indices are concrete).
+
+    A prebuilt `schedule` (e.g. from core.engine.cached_block_schedule) skips
+    per-call plan construction; it must match window/block_rows.
     """
     R, D = table.shape
     n = indices.shape[0]
-    if max_warps is None:
-        max_warps = window
-    sched = build_block_schedule(
+    sched, max_warps = resolve_schedule(
         indices.reshape(-1), window=window, block_rows=block_rows,
-        max_warps=max_warps,
+        max_warps=max_warps, schedule=schedule,
     )
     n_windows = sched.n_windows
     # Pad table to whole blocks.

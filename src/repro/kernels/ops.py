@@ -26,6 +26,7 @@ def coalesced_gather(
     window: int = 256,
     block_rows: int = 8,
     max_warps: int | None = None,
+    schedule=None,
     backend: str = "pallas",
 ) -> jnp.ndarray:
     if backend == "jnp":
@@ -36,6 +37,7 @@ def coalesced_gather(
         window=window,
         block_rows=block_rows,
         max_warps=max_warps,
+        schedule=schedule,
         interpret=_interpret_default(),
     )
 
@@ -48,6 +50,7 @@ def sell_spmv(
     cols_per_chunk: int = 8,
     block_rows: int = 8,
     max_warps: int | None = None,
+    schedule=None,
     backend: str = "pallas",
 ) -> jnp.ndarray:
     if backend == "jnp":
@@ -59,5 +62,6 @@ def sell_spmv(
         cols_per_chunk=cols_per_chunk,
         block_rows=block_rows,
         max_warps=max_warps,
+        schedule=schedule,
         interpret=_interpret_default(),
     )

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.coalescer import SENTINEL, build_block_schedule
+from repro.core.coalescer import BlockSchedule, SENTINEL, resolve_schedule
 
 
 def _kernel(
@@ -69,19 +69,21 @@ def sell_spmv_pallas(
     cols_per_chunk: int = 8,
     block_rows: int = 8,
     max_warps: int | None = None,
+    schedule: BlockSchedule | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Returns y = A @ x, y: (n_slices * H,). Semantics: ref.sell_spmv_ref."""
+    """Returns y = A @ x, y: (n_slices * H,). Semantics: ref.sell_spmv_ref.
+
+    A prebuilt `schedule` over the storage-order index stream (e.g. from
+    core.engine.cached_block_schedule) skips per-call plan construction."""
     n_slices, W, H = colidx.shape
     assert W % cols_per_chunk == 0, (W, cols_per_chunk)
     n_chunks = W // cols_per_chunk
     window = cols_per_chunk * H
-    if max_warps is None:
-        max_warps = window
     # The indirect stream in storage order: slice-by-slice, column-major.
-    stream = colidx.reshape(-1)
-    sched = build_block_schedule(
-        stream, window=window, block_rows=block_rows, max_warps=max_warps
+    sched, max_warps = resolve_schedule(
+        colidx.reshape(-1), window=window, block_rows=block_rows,
+        max_warps=max_warps, schedule=schedule,
     )
     assert sched.n_windows == n_slices * n_chunks
     tags = jnp.where(sched.tags == SENTINEL, 0, sched.tags)

@@ -236,6 +236,8 @@ def run_cell(
                 if v is not None:
                     mem[k] = float(v)
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # older JAX: one dict per program
+                ca = ca[0] if ca else None
             if ca:
                 cost = {
                     k: float(v)

@@ -1,0 +1,135 @@
+"""Property-testing shim: real `hypothesis` when installed, a seeded numpy
+fallback otherwise, so `python -m pytest` collects and runs everywhere.
+
+Usage in test modules (drop-in for the hypothesis imports):
+
+    from _propcheck import given, settings, st
+
+The fallback implements the small strategy subset this suite uses —
+``st.integers``, ``st.floats``, ``st.lists``, ``st.sampled_from``,
+``st.composite`` — with `@given` drawing `max_examples` pseudo-random cases
+from a generator seeded deterministically per test (by qualified test name),
+so failures reproduce run-to-run. It does not shrink; when you need
+counterexample shrinking, `pip install hypothesis` and the same tests use the
+real engine unchanged.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by whichever env runs CI
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A sampleable distribution over values."""
+
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng: np.random.Generator):
+            return self._sample_fn(rng)
+
+    class _SettingsProxy:
+        """Mimics `hypothesis.settings(...)` as a decorator: records
+        max_examples on the (already `given`-wrapped) test function."""
+
+        def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                     deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._propcheck_max_examples = self.max_examples
+            return fn
+
+    settings = _SettingsProxy
+
+    def given(**param_strategies):
+        """Run the test over pseudo-random draws of each keyword strategy.
+        The RNG seed derives from the test's qualified name: deterministic
+        across runs and machines, different across tests."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(
+                    wrapper, "_propcheck_max_examples", _DEFAULT_MAX_EXAMPLES
+                )
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode()
+                )
+                rng = np.random.default_rng(seed)
+                for case in range(n):
+                    drawn = {
+                        k: s.sample(rng) for k, s in param_strategies.items()
+                    }
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"propcheck case {case}/{n} failed with drawn "
+                            f"arguments {drawn!r}: {e}"
+                        ) from e
+
+            # pytest resolves fixtures from the *visible* signature; without
+            # this it would follow __wrapped__ and demand fixtures named after
+            # the drawn parameters.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    class _StrategiesModule:
+        """Stand-in for `hypothesis.strategies`."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))]
+            )
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size=0, max_size=10):
+            def sample(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(size)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def composite(fn):
+            """`@st.composite`-style builder: the wrapped function receives a
+            `draw` callable and returns a value."""
+
+            def builder(*args, **kwargs):
+                return _Strategy(
+                    lambda rng: fn(
+                        lambda strategy: strategy.sample(rng), *args, **kwargs
+                    )
+                )
+
+            return builder
+
+    st = _StrategiesModule()

@@ -1,11 +1,10 @@
 """Coalescer invariants: the vectorized/parallel schedule must be access-
 equivalent to the step-exact CSHR policy, and schedule-driven gathers must be
 bitwise order-preserving."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core.coalescer import (
     SENTINEL,
@@ -103,3 +102,98 @@ def test_random_stream_rate_low():
     wide, rate = coalesce_stats(idx, window=256, block_rows=8)
     assert wide >= 4000  # nearly no coalescing
     assert rate < 0.15
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: vectorized schedule vs step-exact CSHR emulation
+# ---------------------------------------------------------------------------
+
+
+def _golden_streams():
+    """Random, skewed, and adversarial index streams (name, indices)."""
+    rng = np.random.default_rng(1234)
+    zipf = np.minimum(rng.zipf(1.3, size=500), 4000) - 1  # heavy hub reuse
+    return [
+        ("random-uniform", rng.integers(0, 4096, size=700)),
+        ("random-small-range", rng.integers(0, 64, size=300)),
+        ("skewed-zipf", zipf),
+        ("all-same-block", np.full(200, 42)),  # 1 warp per window
+        ("all-distinct-blocks", np.arange(300) * 8),  # W warps per window
+        ("sawtooth", np.tile(np.arange(40), 12)),
+        ("single-element", np.asarray([7])),
+    ]
+
+
+def _trace_by_window(idx, trace, window):
+    """Regroup the flat CSHRTrace into per-window (tags, slot -> (tag, off))."""
+    out = []
+    pos = 0
+    for lo in range(0, len(idx), window):
+        w_len = min(window, len(idx) - lo)
+        served = np.zeros(w_len, dtype=bool)
+        tags_here = []
+        slot_map = {}
+        while not served.all():
+            tag = trace.tags[pos]
+            hit = trace.hitmaps[pos][:w_len]
+            offs = trace.offsets[pos]
+            tags_here.append(tag)
+            for slot, off in zip(np.nonzero(hit)[0], offs):
+                slot_map[int(slot)] = (int(tag), int(off))
+            served |= hit
+            pos += 1
+        out.append((tags_here, slot_map))
+    assert pos == len(trace.tags)  # trace fully consumed
+    return out
+
+
+@pytest.mark.parametrize("window,block", [(16, 4), (32, 8), (64, 8), (8, 1)])
+def test_schedule_golden_vs_cshr_trace(window, block):
+    """`build_block_schedule` must issue exactly the CSHR policy's wide
+    accesses: per window the same set of block tags, and per element the same
+    (block, offset) coordinate the step-exact emulation serves it from."""
+    for name, idx in _golden_streams():
+        idx = np.asarray(idx, dtype=np.int64)
+        trace = cshr_reference_trace(idx, window=window, block_rows=block)
+        sched = build_block_schedule(
+            jnp.asarray(idx.astype(np.int32)), window=window, block_rows=block
+        )
+        per_window = _trace_by_window(idx, trace, window)
+        assert sched.n_windows == len(per_window), name
+        tags = np.asarray(sched.tags)
+        n_warps = np.asarray(sched.n_warps)
+        elem_warp = np.asarray(sched.elem_warp)
+        elem_offset = np.asarray(sched.elem_offset)
+        for w, (trace_tags, slot_map) in enumerate(per_window):
+            valid = tags[w][tags[w] != SENTINEL]
+            # same wide accesses (CSHR issues each unique block once; the
+            # schedule stores them sorted). The final partial window is padded
+            # with index 0 (block 0), which may add one pad-only warp the
+            # watchdog-flushed trace doesn't issue.
+            w_len = min(window, len(idx) - w * window)
+            expected = np.unique(trace_tags)
+            if w_len < window:
+                expected = np.unique(np.concatenate([expected, [0]]))
+            assert n_warps[w] == len(expected), (name, w)
+            np.testing.assert_array_equal(valid, expected, name)
+            # same per-element (block, offset) service coordinates
+            for slot, (tag, off) in slot_map.items():
+                assert tags[w, elem_warp[w, slot]] == tag, (name, w, slot)
+                assert elem_offset[w, slot] == off, (name, w, slot)
+
+
+@pytest.mark.parametrize("window,block", [(16, 4), (64, 8), (256, 8)])
+def test_coalesce_stats_pinned_to_cshr_trace(window, block):
+    """Regression pin: the perf model's wide-access count (`coalesce_stats`,
+    built on `window_unique_counts`) must equal the number of tags the
+    ground-truth CSHR emulation issues — the model can't silently drift from
+    the policy it claims to measure."""
+    for name, idx in _golden_streams():
+        idx = np.asarray(idx, dtype=np.int64)
+        trace = cshr_reference_trace(idx, window=window, block_rows=block)
+        wide, rate = coalesce_stats(idx, window=window, block_rows=block)
+        assert wide == len(trace.tags), (name, window, block)
+        # the trace consumes one coalescer cycle per issued tag
+        assert trace.cycles == wide, name
+        if wide:
+            assert rate == len(idx) / (wide * block), name

@@ -1,0 +1,184 @@
+"""SpMVEngine: plan-once/execute-many semantics, schedule-cache identity,
+and bit-exact agreement with the per-call reference paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    SpMVEngine,
+    cached_block_schedule,
+    clear_engine_cache,
+    clear_schedule_cache,
+    engine_cache_stats,
+    get_engine,
+    schedule_cache_stats,
+    stream_digest,
+)
+from repro.core.formats import csr_to_sell, dense_to_csr
+from repro.core.spmv import spmv_csr, spmv_sell, spmv_sell_coalesced
+
+RNG = np.random.default_rng(42)
+
+
+def _case(n_rows=100, n_cols=120, density=0.15, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((n_rows, n_cols)) * (
+        rng.random((n_rows, n_cols)) < density
+    )
+    return dense, dense_to_csr(dense)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_engine_cache()
+    clear_schedule_cache()
+    yield
+
+
+@pytest.mark.parametrize("window,block_rows", [(16, 4), (64, 8), (256, 8)])
+def test_matvec_matches_references(window, block_rows):
+    dense, csr = _case()
+    sell = csr_to_sell(csr)
+    x = jnp.asarray(RNG.standard_normal(csr.n_cols).astype(np.float32))
+    eng = SpMVEngine(sell, window=window, block_rows=block_rows)
+    y = eng.matvec(x)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(spmv_csr(csr, x)), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(spmv_sell(sell, x)), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(y), dense.astype(np.float32) @ np.asarray(x),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_engine_accepts_csr_input():
+    dense, csr = _case(57, 91, seed=3)
+    x = jnp.asarray(RNG.standard_normal(csr.n_cols).astype(np.float32))
+    eng = SpMVEngine(csr, window=64, block_rows=8)
+    np.testing.assert_allclose(
+        np.asarray(eng.matvec(x)), dense.astype(np.float32) @ np.asarray(x),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_matmat_bit_identical_to_per_column_coalesced_spmv():
+    """Acceptance: batched execution on a cached plan == per-column
+    `spmv_sell_coalesced`, bit for bit."""
+    _, csr = _case(80, 96, seed=7)
+    sell = csr_to_sell(csr)
+    X = jnp.asarray(RNG.standard_normal((csr.n_cols, 9)).astype(np.float32))
+    eng = get_engine(sell, window=64, block_rows=8)
+    Y = eng.matmat(X)
+    assert Y.shape == (csr.n_rows, 9)
+    for j in range(X.shape[1]):
+        col = spmv_sell_coalesced(sell, X[:, j], window=64, block_rows=8)
+        np.testing.assert_array_equal(np.asarray(Y[:, j]), np.asarray(col))
+
+
+def test_matvec_matmat_consistency_and_shape_checks():
+    _, csr = _case(40, 50, seed=11)
+    eng = SpMVEngine(csr_to_sell(csr), window=32, block_rows=4)
+    X = jnp.asarray(RNG.standard_normal((csr.n_cols, 3)).astype(np.float32))
+    Y = eng.matmat(X)
+    for j in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(Y[:, j]), np.asarray(eng.matvec(X[:, j]))
+        )
+    with pytest.raises(ValueError):
+        eng.matvec(jnp.zeros((csr.n_cols + 1,), jnp.float32))
+    with pytest.raises(ValueError):
+        eng.matmat(jnp.zeros((csr.n_cols + 1, 2), jnp.float32))
+    # __call__ dispatches on rank
+    np.testing.assert_array_equal(
+        np.asarray(eng(X[:, 0])), np.asarray(eng.matvec(X[:, 0]))
+    )
+    np.testing.assert_array_equal(np.asarray(eng(X)), np.asarray(Y))
+
+
+def test_schedule_cache_identity_and_keying():
+    """Repeat plans return the *identical* schedule object; changing window
+    or block_rows yields a distinct schedule."""
+    _, csr = _case(60, 60, seed=5)
+    sell = csr_to_sell(csr)
+    a = SpMVEngine(sell, window=64, block_rows=8)
+    b = SpMVEngine(sell, window=64, block_rows=8)
+    sa = a.schedule  # planned first: cache miss
+    sb = b.schedule  # repeat plan: content-addressed hit
+    assert sb is sa
+    assert a.plan_cached is False and b.plan_cached is True
+    c = SpMVEngine(sell, window=32, block_rows=8)
+    d = SpMVEngine(sell, window=64, block_rows=4)
+    assert c.schedule is not a.schedule
+    assert d.schedule is not a.schedule
+    stats = schedule_cache_stats()
+    assert stats["hits"] >= 1 and stats["misses"] >= 3
+
+
+def test_cached_block_schedule_content_addressing():
+    idx = np.arange(500, dtype=np.int32) % 97
+    s1, hit1 = cached_block_schedule(idx, window=64, block_rows=8)
+    s2, hit2 = cached_block_schedule(idx.copy(), window=64, block_rows=8)
+    assert not hit1 and hit2  # different buffers, same content -> same plan
+    assert s2 is s1
+    s3, hit3 = cached_block_schedule(idx + 1, window=64, block_rows=8)
+    assert not hit3 and s3 is not s1
+    assert stream_digest(idx) == stream_digest(idx.copy())
+    assert stream_digest(idx) != stream_digest(idx.astype(np.int64))
+
+
+def test_get_engine_reuses_engine_and_compiled_fns():
+    _, csr = _case(64, 64, seed=9)
+    sell = csr_to_sell(csr)
+    e1 = get_engine(sell, window=64, block_rows=8)
+    x = jnp.asarray(RNG.standard_normal(csr.n_cols).astype(np.float32))
+    e1.matvec(x)
+    e2 = get_engine(sell, window=64, block_rows=8)
+    assert e2 is e1
+    assert engine_cache_stats()["hits"] >= 1
+    # engine from the equivalent CSR content resolves to the same plan params
+    e3 = get_engine(sell, window=32, block_rows=8)
+    assert e3 is not e1
+
+
+def test_plan_report_contents():
+    _, csr = _case(70, 70, seed=13)
+    eng = SpMVEngine(csr_to_sell(csr), window=64, block_rows=8)
+    rep = eng.plan_report()
+    assert rep["n_rows"] == 70 and rep["n_cols"] == 70
+    assert rep["window"] == 64 and rep["block_rows"] == 8
+    assert rep["wide_accesses"] > 0
+    assert 0 < rep["coalesce_rate"]
+    assert rep["n_windows"] == eng.schedule.n_windows
+    assert set(rep["perf"]) == {"base", "pack0", "pack256"}
+    for r in rep["perf"].values():
+        assert r["cycles"] > 0 and 0 < r["mem_utilization"] <= 1.0
+    # pack256 should beat the coupled baseline on the model
+    assert rep["perf"]["pack256"]["cycles"] < rep["perf"]["base"]["cycles"]
+
+
+def test_sell_input_rejects_mismatched_conversion_params():
+    """slice_height/width_multiple only steer CSR->SELL conversion; asking an
+    already-built SELL for different geometry must raise, not be ignored."""
+    _, csr = _case(50, 50, seed=19)
+    sell = csr_to_sell(csr, slice_height=32)
+    with pytest.raises(ValueError, match="slice_height"):
+        SpMVEngine(sell, slice_height=4)
+    with pytest.raises(ValueError, match="slice_height"):
+        get_engine(sell, slice_height=4)
+    with pytest.raises(ValueError, match="multiples"):
+        get_engine(sell, width_multiple=64)
+    # matching params are fine
+    SpMVEngine(sell, slice_height=32, width_multiple=1)
+
+
+def test_lazy_planning_perf_does_not_build_schedule():
+    _, csr = _case(50, 50, seed=17)
+    eng = SpMVEngine(csr_to_sell(csr), window=64, block_rows=8)
+    assert eng._schedule is None
+    eng.perf("pack256")
+    assert eng._schedule is None  # perf-model query never pays for planning
+    eng.matvec(jnp.zeros((csr.n_cols,), jnp.float32))
+    assert eng._schedule is not None

@@ -1,7 +1,6 @@
 """CSR/SELL format correctness (property-based round trips)."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core.formats import (
     coo_to_csr,

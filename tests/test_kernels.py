@@ -1,11 +1,10 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
 Kernels run in interpret mode on CPU (TPU is the deployment target)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -96,6 +95,62 @@ def test_sell_spmv_against_dense():
     np.testing.assert_allclose(  # f32 on CPU (x64 disabled)
         np.asarray(y)[: sell.n_rows], dense @ x, rtol=1e-5, atol=1e-5
     )
+
+
+def test_kernels_accept_prebuilt_schedule():
+    """Passing an engine-cached BlockSchedule skips per-call planning and
+    produces identical results to the self-planning path."""
+    from repro.core.engine import cached_block_schedule
+
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.standard_normal((300, 16)).astype(np.float32))
+    idx = rng.integers(0, 300, size=1000).astype(np.int32)
+    sched, _ = cached_block_schedule(idx, window=64, block_rows=8)
+    out = ops.coalesced_gather(
+        table, jnp.asarray(idx), window=64, block_rows=8, schedule=sched
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(table)[idx])
+
+    colidx = rng.integers(0, 300, size=(3, 8, 32)).astype(np.int32)
+    values = rng.standard_normal((3, 8, 32)).astype(np.float32)
+    x = rng.standard_normal(300).astype(np.float32)
+    ssched, _ = cached_block_schedule(
+        colidx.reshape(-1), window=8 * 32, block_rows=8
+    )
+    y = ops.sell_spmv(
+        jnp.asarray(colidx), jnp.asarray(values), jnp.asarray(x),
+        cols_per_chunk=8, block_rows=8, schedule=ssched,
+    )
+    ye = ref.sell_spmv_ref(
+        jnp.asarray(colidx), jnp.asarray(values), jnp.asarray(x)
+    )
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ye), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mismatched_prebuilt_schedule_rejected():
+    """A schedule planned for different geometry or a different stream length
+    must raise, not silently gather the wrong elements."""
+    from repro.core.engine import cached_block_schedule
+
+    rng = np.random.default_rng(4)
+    table = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32))
+    idx = rng.integers(0, 64, size=256).astype(np.int32)
+    sched, _ = cached_block_schedule(idx, window=32, block_rows=8)
+    with pytest.raises(ValueError, match="window"):
+        ops.coalesced_gather(
+            table, jnp.asarray(idx), window=64, block_rows=8, schedule=sched
+        )
+    with pytest.raises(ValueError, match="block_rows"):
+        ops.coalesced_gather(
+            table, jnp.asarray(idx), window=32, block_rows=4, schedule=sched
+        )
+    with pytest.raises(ValueError, match="windows"):
+        ops.coalesced_gather(
+            table, jnp.asarray(idx[:100]), window=32, block_rows=8,
+            schedule=sched,
+        )
 
 
 def test_max_warps_reduction_still_correct():

@@ -1,8 +1,7 @@
 """Library SpMV ops: all data paths agree with dense."""
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core.formats import csr_to_sell, dense_to_csr
 from repro.core.indirect_stream import coalesced_gather
