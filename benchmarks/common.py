@@ -31,5 +31,21 @@ def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
     return out, dt * 1e6  # us
 
 
+# Every emit() is also recorded here so harness entry points (run.py --smoke)
+# can serialize the full pass — e.g. the BENCH_smoke.json CI artifact.
+_ROWS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    _ROWS.append(
+        {"name": name, "us_per_call": round(us_per_call, 1), "derived": derived}
+    )
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rows() -> list:
+    return list(_ROWS)
+
+
+def reset_rows() -> None:
+    _ROWS.clear()

@@ -9,11 +9,16 @@ Measures what the content-addressed schedule cache buys on the serving path:
     compiled matvec executes immediately.
   * ``plan_only`` / ``plan_cached`` — schedule construction in isolation, miss
     vs content-addressed hit.
+  * ``schedule_disk_save`` / ``schedule_disk_load`` — the persistent store:
+    cold plan + write-back, then a load from disk with an empty in-memory
+    cache (what a cold process pays when the matrix is already known).
 
 The warm path must be strictly faster than the cold path — that delta is the
 amortized per-call cost the plan-once engine removes.
 """
 from __future__ import annotations
+
+import tempfile
 
 import numpy as np
 
@@ -88,11 +93,43 @@ def run() -> dict:
         f"warm-plan matvec ({warm_us:.1f}us) must beat cold-plan "
         f"({cold_us:.1f}us)"
     )
+
+    # Persistent store: cold build + write-back, then a disk load standing in
+    # for a cold process that has seen this matrix before.
+    with tempfile.TemporaryDirectory() as cache_dir:
+        clear_schedule_cache()
+        _, save_us = timed(
+            lambda: cached_block_schedule(
+                stream, window=256, block_rows=8, cache_dir=cache_dir
+            )
+        )
+        clear_schedule_cache()  # drop memory, keep disk: the cold process
+        _, load_us = timed(
+            lambda: cached_block_schedule(
+                stream, window=256, block_rows=8, cache_dir=cache_dir
+            )
+        )
+        disk_stats = schedule_cache_stats()
+        emit(
+            "engine_cache/schedule_disk_save", save_us,
+            f"stream={stream.size};plan_plus_writeback",
+        )
+        emit(
+            "engine_cache/schedule_disk_load", load_us,
+            f"built={disk_stats['built']};disk_hits={disk_stats['disk_hits']}"
+            f";speedup_vs_plan={plan_us / max(load_us, 1e-9):.1f}x",
+        )
+        assert disk_stats["built"] == 0 and disk_stats["disk_hits"] == 1, (
+            f"disk-warm pass must not replan: {disk_stats}"
+        )
+
     return {
         "cold_us": cold_us,
         "warm_us": warm_us,
         "plan_us": plan_us,
         "plan_hit_us": plan_hit_us,
+        "save_us": save_us,
+        "load_us": load_us,
         "speedup": speedup,
     }
 

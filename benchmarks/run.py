@@ -1,14 +1,23 @@
 """Benchmark harness: one module per paper figure/table. Prints
 ``name,us_per_call,derived`` CSV rows. `BENCH_SCALE=ci|bench|paper` controls
 matrix sizes (default bench). ``--smoke`` forces the tiny ci scale and runs a
-quick subset (fig5 + engine cache + kernel microbench) — the CI fast pass."""
+quick subset (fig5 + engine cache + kernel microbench + the backend parity
+gate) — the CI fast pass. The smoke pass writes ``BENCH_smoke.json`` (all
+emitted rows + per-matrix pallas-vs-reference max abs error) and exits
+nonzero if any parity error exceeds `PARITY_TOL` — CI uploads the file as a
+workflow artifact and fails on the gate."""
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import sys
 import time
 
 import numpy as np
+
+PARITY_TOL = 1e-5
+SMOKE_JSON = "BENCH_smoke.json"
 
 
 def _kernel_microbench() -> None:
@@ -42,6 +51,42 @@ def _kernel_microbench() -> None:
         )
 
 
+def _backend_parity_check() -> dict:
+    """Pallas backend vs reference backend on the smoke matrices: max abs
+    error per matrix. Matrices are deliberately tiny — off-TPU the kernel
+    runs in interpret mode, and this is a correctness gate, not a timing."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import SpMVEngine
+    from repro.core.formats import csr_to_sell
+    from repro.core.matrices import banded, powerlaw, random_uniform
+    from .common import emit, timed
+
+    smoke = (
+        ("banded-512", banded(512, 16, 0.7)),
+        ("powerlaw-512", powerlaw(512, 8)),
+        ("random-256", random_uniform(256, 12)),
+    )
+    errors: dict = {}
+    for name, gen in smoke:
+        csr = gen(np.random.default_rng(0))
+        sell = csr_to_sell(csr)
+        x = jnp.asarray(
+            np.random.default_rng(1).standard_normal(sell.n_cols)
+            .astype(np.float32)
+        )
+        y_ref = np.asarray(SpMVEngine(sell, backend="reference").matvec(x))
+        eng = SpMVEngine(sell, backend="pallas")
+        y_pal, us = timed(lambda e=eng: e.matvec(x).block_until_ready())
+        err = float(np.abs(np.asarray(y_pal) - y_ref).max())
+        errors[name] = err
+        emit(
+            f"parity/sell_spmv_pallas/{name}", us,
+            f"n={sell.n_rows};max_abs_err={err:.2e};tol={PARITY_TOL:.0e}",
+        )
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -53,14 +98,35 @@ def main() -> None:
         os.environ["BENCH_SCALE"] = "ci"  # before .common reads it
 
     t0 = time.time()
-    from . import engine_cache, fig5_spmv
+    from . import common, engine_cache, fig5_spmv
 
     print("name,us_per_call,derived")
     if args.smoke:
         fig5_spmv.run()
         engine_cache.run()
         _kernel_microbench()
-        print(f"# total {time.time() - t0:.1f}s (smoke)")
+        parity = _backend_parity_check()
+        total_s = time.time() - t0
+        payload = {
+            "scale": os.environ.get("BENCH_SCALE", "ci"),
+            "total_s": round(total_s, 1),
+            "parity_tol": PARITY_TOL,
+            "backend_parity": parity,
+            "rows": common.rows(),
+        }
+        with open(SMOKE_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {SMOKE_JSON} ({len(payload['rows'])} rows)")
+        print(f"# total {total_s:.1f}s (smoke)")
+        # NaN must fail too, hence the negated <= rather than a >.
+        bad = {k: v for k, v in parity.items() if not (v <= PARITY_TOL)}
+        if bad:
+            print(
+                f"# PARITY FAILURE: pallas-vs-reference error exceeds "
+                f"{PARITY_TOL:.0e} on {sorted(bad)}: {bad}",
+                file=sys.stderr,
+            )
+            raise SystemExit(1)
         return
 
     from . import fig3_indirect_stream, fig4_breakdown, fig6_efficiency

@@ -37,13 +37,18 @@ def main() -> None:
     ):
         csr = gen(rng)
         sell = csr_to_sell(csr)
-        engine = get_engine(sell, window=256, block_rows=8)
+        # backend="auto" serves through the fused pallas kernel on TPU and
+        # the jnp reference elsewhere; the plan (and its persistent cache —
+        # set $REPRO_SCHEDULE_CACHE) is shaped for whichever executor runs.
+        engine = get_engine(sell, block_rows=8, backend="auto")
         lam = power_iteration(engine, n_iters=10)
         rep = engine.plan_report()
         print(
             f"{name}: nnz={csr.nnz}  |A x|/|x| -> {lam:.3f}  "
+            f"backend={rep['backend_resolved']}  "
             f"(plan: {rep['wide_accesses']} wide accesses, "
             f"coalesce_rate={rep['coalesce_rate']:.2f}, "
+            f"plan_width={rep['plan_width']}, "
             f"schedule_cached={rep['schedule_cached']})"
         )
         for system in ("base", "pack0", "pack256"):

@@ -9,6 +9,7 @@ from .coalescer import (  # noqa: F401
     coalesce_stats,
     cshr_reference_trace,
     schedule_gather_reference,
+    trim_schedule_warps,
     window_unique_counts,
 )
 from .formats import (  # noqa: F401
@@ -25,8 +26,16 @@ from .engine import (  # noqa: F401
     clear_schedule_cache,
     engine_cache_stats,
     get_engine,
+    resolve_backend,
     schedule_cache_stats,
     stream_digest,
+)
+from .schedule_store import (  # noqa: F401
+    CACHE_DIR_ENV,
+    ScheduleCacheMismatch,
+    load_schedule,
+    save_schedule,
+    schedule_path,
 )
 from .indirect_stream import coalesced_gather  # noqa: F401
 from .perfmodel import (  # noqa: F401

@@ -222,6 +222,23 @@ def build_block_schedule(
     )
 
 
+def trim_schedule_warps(schedule: BlockSchedule) -> BlockSchedule:
+    """Drop all-SENTINEL warp columns from a built schedule.
+
+    The planner allocates `max_warps` tag slots per window (the always-safe
+    default is `window` itself), but real streams coalesce into far fewer wide
+    blocks — a banded matrix needs a handful of warps per 256-element window.
+    Trimming to the stream's true per-window maximum shrinks the kernel grid's
+    warp dimension and the persisted metadata with no semantic change:
+    `elem_warp` always indexes below `n_warps`, so dropped columns were never
+    reachable. Requires concrete (non-traced) `n_warps`.
+    """
+    used = max(int(np.max(np.asarray(schedule.n_warps), initial=1)), 1)
+    if used >= schedule.max_warps:
+        return schedule
+    return dataclasses.replace(schedule, tags=schedule.tags[:, :used])
+
+
 def resolve_schedule(
     indices: jnp.ndarray,
     *,

@@ -15,6 +15,23 @@ module makes the plan a first-class, cached object:
     `matmat(X)` closures that reuse the schedule across thousands of
     right-hand sides. `matmat` is `vmap` over RHS columns: one schedule, one
     compiled program, k columns.
+  * Execution backends — ``backend="reference" | "pallas" | "auto"``. The
+    reference backend executes the jnp schedule-gather oracle; the pallas
+    backend runs the fused `kernels.sell_spmv` kernel (natively on TPU,
+    interpret mode elsewhere). The kernel consumes SELL in
+    ``cols_per_chunk``-wide chunks, so the *planner* is width-aware: when the
+    padded width W is not a multiple of `cols_per_chunk`, the plan geometry
+    is padded up (zero columns, colidx 0 / value 0) and the `BlockSchedule`
+    is built against the padded stream — the plan is shaped for the execution
+    unit at planning time, never patched at run time. ``"auto"`` picks pallas
+    on TPU and the reference path elsewhere (interpret mode is a correctness
+    tool, not a serving path).
+  * Schedule persistence — `cached_block_schedule` backs the in-memory cache
+    with digest-named npz files (core.schedule_store) when a cache directory
+    is configured (``cache_dir=`` or ``$REPRO_SCHEDULE_CACHE``), so a cold
+    process skips `build_block_schedule` entirely for known matrices.
+    Engine-planned files embed the matrix content digest and are rejected on
+    mismatch.
   * `get_engine` — engine-level cache (keyed on matrix content + plan params)
     so ad-hoc call sites (`spmv_sell_coalesced`, serving loops) hit warm
     compiled paths without threading engine handles around.
@@ -29,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple, Union
 
@@ -36,10 +54,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import schedule_store
 from .coalescer import BlockSchedule, build_block_schedule, coalesce_stats, \
-    schedule_gather_reference
+    schedule_gather_reference, trim_schedule_warps
 from .formats import CSRMatrix, SELLMatrix, csr_to_sell
 from .perfmodel import DEFAULT_HW, HWConfig, spmv_perf
+
+BACKENDS = ("reference", "pallas", "auto")
+DEFAULT_WINDOW = 256
+DEFAULT_COLS_PER_CHUNK = 8
+
+
+def resolve_backend(backend: str) -> str:
+    """Map "auto" to a concrete executor: pallas on TPU (native compile),
+    the jnp reference elsewhere — interpret-mode pallas is for correctness
+    checks, not serving. "reference"/"pallas" pass through."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return backend
 
 # ---------------------------------------------------------------------------
 # Content-addressed schedule cache
@@ -84,6 +118,12 @@ class _LRUCache:
 _schedule_cache = _LRUCache(_SCHEDULE_CACHE_MAX)
 _engine_cache = _LRUCache(_ENGINE_CACHE_MAX)
 
+# Plan-construction counters, distinct from the LRU's hit/miss pair: `built`
+# counts actual `build_block_schedule` invocations (the cost persistence
+# exists to avoid), the disk_* counters observe the persistent layer. The CI
+# round-trip gate asserts built == 0 for a cold process with a warm disk cache.
+_plan_stats = {"built": 0, "disk_hits": 0, "disk_rejects": 0, "disk_saves": 0}
+
 
 def stream_digest(indices: np.ndarray) -> str:
     """SHA-256 of an index stream's bytes (plus shape/dtype, so e.g. an int32
@@ -101,16 +141,53 @@ def cached_block_schedule(
     window: int,
     block_rows: int,
     max_warps: Optional[int] = None,
+    cache_dir: Optional[str] = None,
+    matrix_digest: Optional[str] = None,
 ) -> Tuple[BlockSchedule, bool]:
     """Build (or fetch) the coalescer schedule for an index stream.
 
     Returns ``(schedule, was_cached)``. Repeat calls with a byte-identical
     stream and the same plan parameters return the identical schedule object.
+
+    Built schedules are warp-trimmed (`trim_schedule_warps`): the tag matrix
+    keeps only the warp columns the stream actually uses, which shrinks both
+    the kernel grid and the persisted metadata.
+
+    When a cache directory is configured (``cache_dir=`` or the
+    ``$REPRO_SCHEDULE_CACHE`` env var), an in-memory miss falls through to
+    the persistent store before planning, and fresh plans are written back —
+    digest-named npz files validated on load (stream digest always;
+    `matrix_digest` too when both sides carry one). Disk hits count as
+    ``was_cached=True``: the plan was not rebuilt.
     """
-    key = (stream_digest(indices), window, block_rows, max_warps)
+    digest = stream_digest(indices)
+    key = (digest, window, block_rows, max_warps)
     sched = _schedule_cache.get(key)
     if sched is not None:
         return sched, True
+
+    cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+    path = None
+    if cache_dir:
+        path = schedule_store.schedule_path(
+            cache_dir, digest, window=window, block_rows=block_rows,
+            max_warps=max_warps, matrix_digest=matrix_digest,
+        )
+        if os.path.exists(path):
+            try:
+                sched = schedule_store.load_schedule(
+                    path,
+                    expect_stream_digest=digest,
+                    expect_window=window,
+                    expect_block_rows=block_rows,
+                    expect_matrix_digest=matrix_digest,
+                )
+                _plan_stats["disk_hits"] += 1
+                _schedule_cache.put(key, sched)
+                return sched, True
+            except schedule_store.ScheduleCacheMismatch:
+                _plan_stats["disk_rejects"] += 1
+
     sched = build_block_schedule(
         jnp.asarray(np.asarray(indices, dtype=np.int32)),
         window=window,
@@ -122,7 +199,14 @@ def cached_block_schedule(
         lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a,
         sched,
     )
+    sched = trim_schedule_warps(sched)
+    _plan_stats["built"] += 1
     _schedule_cache.put(key, sched)
+    if path is not None:
+        schedule_store.save_schedule(
+            path, sched, stream_digest=digest, matrix_digest=matrix_digest
+        )
+        _plan_stats["disk_saves"] += 1
     return sched, False
 
 
@@ -131,11 +215,16 @@ def schedule_cache_stats() -> Dict[str, int]:
         "size": len(_schedule_cache),
         "hits": _schedule_cache.hits,
         "misses": _schedule_cache.misses,
+        **_plan_stats,
     }
 
 
 def clear_schedule_cache() -> None:
+    """Empty the in-memory schedule cache and zero all counters (including
+    the plan/disk counters — on-disk files are untouched)."""
     _schedule_cache.clear()
+    for k in _plan_stats:
+        _plan_stats[k] = 0
 
 
 def clear_engine_cache() -> None:
@@ -197,16 +286,44 @@ class SpMVEngine:
     step) or an already-built SELL. The constructor validates the format,
     pads the SELL slices once, and plans the coalescer schedule through the
     content-addressed cache. `matvec`/`matmat` then only execute.
+
+    ``backend`` selects the executor: ``"reference"`` (jnp schedule-gather
+    oracle), ``"pallas"`` (fused `kernels.sell_spmv` kernel; native on TPU,
+    interpret mode elsewhere), or ``"auto"`` (pallas iff running on TPU).
+    The pallas kernel consumes ``cols_per_chunk`` SELL columns per grid step,
+    which fixes its plan geometry: the padded width must be a multiple of
+    `cols_per_chunk` and the window is ``cols_per_chunk * slice_height`` (one
+    (slice, chunk) of the index stream). The planner handles both: plan-level
+    width padding (zero columns) plus the derived window, applied *before*
+    the `BlockSchedule` is built, so the content-addressed cache keys on the
+    exact stream and geometry the kernel executes.
+
+    ``plan_width_multiple`` overrides the plan-level width padding (default:
+    `cols_per_chunk` for the pallas backend, 1 for the reference backend).
+    The reference executor reduces over the real width only, so a padded plan
+    is bit-identical to an unpadded one — the property the replanning tests
+    pin down.
+
+    ``window=None`` (default) resolves to 256 for the reference backend and
+    to the kernel-derived window for pallas; an explicit window that fights
+    the pallas geometry raises rather than being silently ignored.
+
+    ``cache_dir`` (default: ``$REPRO_SCHEDULE_CACHE``) enables persistent
+    schedule caching — see `cached_block_schedule`.
     """
 
     def __init__(
         self,
         matrix: Union[CSRMatrix, SELLMatrix],
         *,
-        window: int = 256,
+        window: Optional[int] = None,
         block_rows: int = 8,
         slice_height: Optional[int] = None,
         width_multiple: int = 1,
+        backend: str = "auto",
+        cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
+        plan_width_multiple: Optional[int] = None,
+        cache_dir: Optional[str] = None,
     ):
         if isinstance(matrix, CSRMatrix):
             matrix.validate()
@@ -219,11 +336,37 @@ class SpMVEngine:
         else:
             raise TypeError(f"expected CSRMatrix or SELLMatrix, got {type(matrix)}")
         self.sell = sell
-        self.window = int(window)
+        self.backend = backend  # as requested ("auto" preserved for report)
+        self.backend_resolved = resolve_backend(backend)
+        self.cols_per_chunk = int(cols_per_chunk)
+        if self.cols_per_chunk < 1:
+            raise ValueError(f"cols_per_chunk must be >= 1, got {cols_per_chunk}")
         self.block_rows = int(block_rows)
+        self.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+
+        kernel_window = self.cols_per_chunk * sell.slice_height
+        if self.backend_resolved == "pallas":
+            if window is not None and int(window) != kernel_window:
+                raise ValueError(
+                    f"backend='pallas' plans one (slice, chunk) per window: "
+                    f"window = cols_per_chunk * slice_height = {kernel_window}"
+                    f", but window={window} was requested (pass window=None "
+                    f"to derive it, or change cols_per_chunk)"
+                )
+            self.window = kernel_window
+        else:
+            self.window = DEFAULT_WINDOW if window is None else int(window)
+        if plan_width_multiple is None:
+            plan_width_multiple = (
+                self.cols_per_chunk if self.backend_resolved == "pallas" else 1
+            )
+        self.plan_width_multiple = int(plan_width_multiple)
+
         # Planning is lazy: perf-model queries (`perf`) never pay for padding,
         # schedule construction, or compilation — only execution does.
         self._padded = None  # (values (n_slices, W, H), stream, W)
+        self._ci3 = None  # colidx (n_slices, W, H) — kept for plan padding
+        self._plan = None  # (ci_plan, va_plan, stream, W_real, W_plan)
         self._schedule: Optional[BlockSchedule] = None
         self.plan_cached: Optional[bool] = None  # set when the plan is built
         self._matvec = None
@@ -236,34 +379,121 @@ class SpMVEngine:
             from .spmv import _sell_padded  # local: spmv routes through engine
 
             ci, va, W = _sell_padded(self.sell)
+            self._ci3 = ci
             self._padded = (va, np.ascontiguousarray(ci.reshape(-1)), W)
         return self._padded
 
+    def _ensure_plan(self):
+        """Width-aware plan geometry: pad the SELL width up to
+        `plan_width_multiple` (zero columns: colidx 0 / value 0, safe for
+        SpMV) and lay out the index stream the executor will actually
+        consume. Returns ``(ci_plan, va_plan, stream, W_real, W_plan)`` with
+        the arrays shaped (n_slices, W_plan, H)."""
+        if self._plan is None:
+            va, stream, W = self._ensure_padded()
+            ci = self._ci3
+            wm = self.plan_width_multiple
+            W_plan = max(-(-W // wm) * wm, wm)
+            if W_plan != W:
+                ns, H = self.sell.n_slices, self.sell.slice_height
+                ci_plan = np.zeros((ns, W_plan, H), dtype=np.int32)
+                va_plan = np.zeros((ns, W_plan, H), dtype=va.dtype)
+                ci_plan[:, :W] = ci
+                va_plan[:, :W] = va
+                stream = np.ascontiguousarray(ci_plan.reshape(-1))
+            else:
+                ci_plan, va_plan = ci, va
+            self._plan = (ci_plan, va_plan, stream, W, W_plan)
+            # The base padded arrays are now redundant (the plan holds what
+            # execution needs); drop them so a padded pallas engine doesn't
+            # retain two O(nnz_padded) copies for its lifetime. Direct
+            # `_ensure_padded` callers just recompute lazily.
+            self._padded = None
+            self._ci3 = None
+        return self._plan
+
     @property
     def schedule(self) -> BlockSchedule:
-        """The coalescer plan (content-addressed cache; built on first use)."""
+        """The coalescer plan (content-addressed cache; built on first use,
+        loaded from the persistent store when one is configured)."""
         if self._schedule is None:
-            _, stream, _ = self._ensure_padded()
+            _, _, stream, _, _ = self._ensure_plan()
             self._schedule, self.plan_cached = cached_block_schedule(
-                stream, window=self.window, block_rows=self.block_rows
+                stream,
+                window=self.window,
+                block_rows=self.block_rows,
+                cache_dir=self.cache_dir,
+                matrix_digest=_sell_content_digest(self.sell),
             )
         return self._schedule
 
+    def persist_schedule(self, cache_dir: Optional[str] = None) -> Optional[str]:
+        """Write the already-built schedule to the persistent store (no-op if
+        no schedule has been planned yet, no directory is configured, or the
+        file already exists). Returns the file path, or None. Plans built
+        *after* a cache directory is set persist automatically; this covers
+        the adopt-a-directory-later path (`get_engine(..., cache_dir=...)`
+        hitting an engine that already planned without one)."""
+        cache_dir = schedule_store.resolve_cache_dir(
+            cache_dir if cache_dir is not None else self.cache_dir
+        )
+        if cache_dir is None or self._schedule is None:
+            return None
+        _, _, stream, _, _ = self._ensure_plan()
+        digest = stream_digest(stream)
+        matrix_digest = _sell_content_digest(self.sell)
+        path = schedule_store.schedule_path(
+            cache_dir, digest, window=self.window, block_rows=self.block_rows,
+            matrix_digest=matrix_digest,
+        )
+        if not os.path.exists(path):
+            schedule_store.save_schedule(
+                path, self._schedule, stream_digest=digest,
+                matrix_digest=matrix_digest,
+            )
+            _plan_stats["disk_saves"] += 1
+        return path
+
     def _ensure_compiled(self):
         if self._matvec is None:
-            va, stream, W = self._ensure_padded()
+            ci_plan, va_plan, stream, W, W_plan = self._ensure_plan()
             sched = self.schedule
             sell = self.sell
             n_slices, H = sell.n_slices, sell.slice_height
             n_rows, n_out = sell.n_rows, stream.shape[0]
 
-            def _matvec(x: jnp.ndarray) -> jnp.ndarray:
-                gathered = schedule_gather_reference(
-                    x[:, None], sched, n_out=n_out
-                )
-                g = gathered[:, 0].reshape(n_slices, W, H)
-                y = jnp.sum(jnp.asarray(va, x.dtype) * g, axis=1)
-                return y.reshape(-1)[:n_rows]
+            if self.backend_resolved == "pallas":
+                # Locals to the kernels package are lazy: core must stay
+                # importable before kernels (which itself imports core).
+                from repro.kernels.ops import resolve_interpret
+                from repro.kernels.sell_spmv import sell_spmv_pallas
+
+                interpret = resolve_interpret()
+                cpc = self.cols_per_chunk
+                block_rows = self.block_rows
+                ci_j = jnp.asarray(ci_plan)
+
+                def _matvec(x: jnp.ndarray) -> jnp.ndarray:
+                    y = sell_spmv_pallas(
+                        ci_j,
+                        jnp.asarray(va_plan, x.dtype),
+                        x,
+                        cols_per_chunk=cpc,
+                        block_rows=block_rows,
+                        schedule=sched,
+                        interpret=interpret,
+                    )
+                    return y[:n_rows]
+
+            else:
+
+                def _matvec(x: jnp.ndarray) -> jnp.ndarray:
+                    gathered = schedule_gather_reference(
+                        x[:, None], sched, n_out=n_out
+                    )
+                    g = gathered[:, 0].reshape(n_slices, W_plan, H)[:, :W]
+                    y = jnp.sum(jnp.asarray(va_plan[:, :W], x.dtype) * g, axis=1)
+                    return y.reshape(-1)[:n_rows]
 
             self._matvec = jax.jit(_matvec)
             self._matmat = jax.jit(jax.vmap(_matvec, in_axes=1, out_axes=1))
@@ -306,7 +536,7 @@ class SpMVEngine:
         """The plan, inspectable: stream/coalescer stats + model predictions.
         Forces planning (this reports on the actual plan, not an estimate)."""
         sched = self.schedule
-        _, stream, W = self._ensure_padded()
+        _, _, stream, W, W_plan = self._ensure_plan()
         wide, rate = coalesce_stats(
             stream, window=self.window, block_rows=self.block_rows
         )
@@ -316,6 +546,10 @@ class SpMVEngine:
             "nnz_padded": self.sell.nnz_padded,
             "slice_height": self.sell.slice_height,
             "padded_width": W,
+            "plan_width": W_plan,
+            "backend": self.backend,
+            "backend_resolved": self.backend_resolved,
+            "cols_per_chunk": self.cols_per_chunk,
             "window": self.window,
             "block_rows": self.block_rows,
             "n_windows": sched.n_windows,
@@ -334,25 +568,52 @@ class SpMVEngine:
 def get_engine(
     matrix: Union[CSRMatrix, SELLMatrix],
     *,
-    window: int = 256,
+    window: Optional[int] = None,
     block_rows: int = 8,
     slice_height: Optional[int] = None,
     width_multiple: int = 1,
+    backend: str = "auto",
+    cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
+    cache_dir: Optional[str] = None,
 ) -> SpMVEngine:
     """Engine cache: same matrix content + plan params -> same engine (and
     therefore same compiled matvec/matmat). CSR inputs are keyed on the SELL
-    they convert to, so CSR and its converted SELL share an engine."""
+    they convert to, so CSR and its converted SELL share an engine. The key
+    includes the *resolved* backend (and, for pallas, `cols_per_chunk`, which
+    shapes its plan); `cache_dir` is not part of the key — it changes where a
+    plan is stored, never what it is."""
     if isinstance(matrix, CSRMatrix):
         matrix.validate()
         kw = {} if slice_height is None else {"slice_height": slice_height}
         matrix = csr_to_sell(matrix, width_multiple=width_multiple, **kw)
     else:
         _check_sell_plan_params(matrix, slice_height, width_multiple)
-    key = (_sell_content_digest(matrix), window, block_rows)
+    resolved = resolve_backend(backend)
+    key = (
+        _sell_content_digest(matrix),
+        window,
+        block_rows,
+        resolved,
+        cols_per_chunk if resolved == "pallas" else None,
+    )
     eng = _engine_cache.get(key)
     if eng is None:
-        eng = SpMVEngine(matrix, window=window, block_rows=block_rows)
+        eng = SpMVEngine(
+            matrix,
+            window=window,
+            block_rows=block_rows,
+            backend=backend,
+            cols_per_chunk=cols_per_chunk,
+            cache_dir=cache_dir,
+        )
         _engine_cache.put(key, eng)
+    elif cache_dir is not None:
+        # The cached engine may have been created without persistence (or
+        # with a different directory). An explicit request must not be
+        # silently dropped: adopt the directory and write through any plan
+        # that was already built.
+        eng.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+        eng.persist_schedule()
     return eng
 
 

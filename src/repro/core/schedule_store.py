@@ -1,0 +1,211 @@
+"""Persistent on-disk store for coalescer `BlockSchedule`s.
+
+Planning is the one expensive, matrix-dependent step of the engine's
+plan-once/execute-many split (the paper's offline preprocessing, Sec. III).
+The in-memory content-addressed cache amortizes it within a process; this
+module amortizes it *across* processes: schedules are serialized to
+digest-named ``.npz`` files under a cache directory, so a cold serving
+process that has seen a matrix before skips `build_block_schedule` entirely.
+
+File layout: ``<cache_dir>/sched-<key>.npz`` where ``key`` hashes the plan
+identity — the index-stream digest plus (window, block_rows, max_warps) and,
+for engine-planned schedules, the owning matrix's content digest. Each file
+carries a JSON header with:
+
+  * ``version`` — store format version; other versions are rejected.
+  * ``stream_digest`` — the SHA-256 of the index stream the schedule was
+    built for. A schedule executed against a different stream would silently
+    gather the wrong elements, so a mismatch always rejects the file.
+  * ``matrix_digest`` — content digest of the owning matrix (values
+    included), when the schedule was planned by an engine. The stream digest
+    alone cannot distinguish two matrices that share a column-index stream;
+    the matrix digest closes that hole for engine-planned schedules: if both
+    the file and the loader carry one and they differ, the file is rejected.
+  * plan geometry (``window``, ``block_rows``, ``n_windows``,
+    ``max_warps``) — cross-checked against the arrays on load so a truncated
+    or hand-edited file cannot produce a malformed schedule.
+
+Writes are atomic (temp file + ``os.replace``) so a crashed process never
+leaves a half-written schedule for the next one to trip over.
+
+The cache directory defaults to the ``REPRO_SCHEDULE_CACHE`` environment
+variable (unset = persistence off); `SpMVEngine`, ``launch/serve.py
+--schedule-cache`` and the benchmarks thread explicit directories through.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .coalescer import BlockSchedule
+
+CACHE_DIR_ENV = "REPRO_SCHEDULE_CACHE"
+STORE_VERSION = 1
+
+_ARRAY_FIELDS = ("tags", "n_warps", "elem_warp", "elem_offset", "elem_valid")
+
+
+class ScheduleCacheMismatch(ValueError):
+    """A persisted schedule exists but cannot be used: wrong store version,
+    wrong stream/matrix digest, inconsistent geometry, or unreadable file.
+    Callers treat this as a cache miss and replan."""
+
+
+def resolve_cache_dir(cache_dir: Optional[str]) -> Optional[str]:
+    """Explicit directory wins; else the env var; else None (persistence off)."""
+    if cache_dir is not None:
+        return str(cache_dir)
+    return os.environ.get(CACHE_DIR_ENV) or None
+
+
+def plan_key_digest(
+    stream_digest: str, *, window: int, block_rows: int,
+    max_warps: Optional[int] = None, matrix_digest: Optional[str] = None,
+) -> str:
+    """Filename-safe digest of the plan identity (stream + plan params).
+
+    `matrix_digest` (when the planner has matrix context) is part of the key:
+    two matrices that share an index stream get *separate* files rather than
+    endlessly rejecting and overwriting each other's plan — the header check
+    in `load_schedule` then only fires on tampered/corrupt files."""
+    payload = repr((
+        stream_digest, int(window), int(block_rows),
+        None if max_warps is None else int(max_warps),
+        matrix_digest,
+    ))
+    return hashlib.sha256(payload.encode()).hexdigest()[:32]
+
+
+def schedule_path(
+    cache_dir: str, stream_digest: str, *, window: int, block_rows: int,
+    max_warps: Optional[int] = None, matrix_digest: Optional[str] = None,
+) -> str:
+    key = plan_key_digest(
+        stream_digest, window=window, block_rows=block_rows,
+        max_warps=max_warps, matrix_digest=matrix_digest,
+    )
+    return os.path.join(cache_dir, f"sched-{key}.npz")
+
+
+def save_schedule(
+    path: str,
+    schedule: BlockSchedule,
+    *,
+    stream_digest: str,
+    matrix_digest: Optional[str] = None,
+) -> str:
+    """Atomically write `schedule` to `path`. Returns the final path."""
+    header = {
+        "version": STORE_VERSION,
+        "stream_digest": stream_digest,
+        "matrix_digest": matrix_digest,
+        "window": int(schedule.window),
+        "block_rows": int(schedule.block_rows),
+        "n_windows": schedule.n_windows,
+        "max_warps": schedule.max_warps,
+    }
+    arrays = {
+        name: np.asarray(getattr(schedule, name)) for name in _ARRAY_FIELDS
+    }
+    dirname = os.path.dirname(path) or "."
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez_compressed(f, header=json.dumps(header), **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path
+
+
+def load_schedule(
+    path: str,
+    *,
+    expect_stream_digest: Optional[str] = None,
+    expect_window: Optional[int] = None,
+    expect_block_rows: Optional[int] = None,
+    expect_matrix_digest: Optional[str] = None,
+) -> BlockSchedule:
+    """Load and validate a persisted schedule.
+
+    Raises `ScheduleCacheMismatch` on any header/geometry disagreement; the
+    matrix-digest check only applies when both sides carry a digest (a
+    schedule saved without matrix context is valid for any matrix whose
+    stream matches — stream identity is what schedule correctness needs).
+    """
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            header = json.loads(z["header"].item())
+            arrays = {name: z[name] for name in _ARRAY_FIELDS}
+    except Exception as e:
+        raise ScheduleCacheMismatch(f"unreadable schedule file {path}: {e}")
+
+    if header.get("version") != STORE_VERSION:
+        raise ScheduleCacheMismatch(
+            f"{path}: store version {header.get('version')!r}, "
+            f"expected {STORE_VERSION}"
+        )
+    if (
+        expect_stream_digest is not None
+        and header.get("stream_digest") != expect_stream_digest
+    ):
+        raise ScheduleCacheMismatch(
+            f"{path}: stream digest mismatch (file planned for a different "
+            f"index stream)"
+        )
+    if (
+        expect_matrix_digest is not None
+        and header.get("matrix_digest") is not None
+        and header["matrix_digest"] != expect_matrix_digest
+    ):
+        raise ScheduleCacheMismatch(
+            f"{path}: matrix digest mismatch (file planned for a different "
+            f"matrix with the same index stream)"
+        )
+    window = int(header.get("window", -1))
+    block_rows = int(header.get("block_rows", -1))
+    if expect_window is not None and window != expect_window:
+        raise ScheduleCacheMismatch(
+            f"{path}: planned for window={window}, expected {expect_window}"
+        )
+    if expect_block_rows is not None and block_rows != expect_block_rows:
+        raise ScheduleCacheMismatch(
+            f"{path}: planned for block_rows={block_rows}, "
+            f"expected {expect_block_rows}"
+        )
+
+    tags = arrays["tags"]
+    n_windows, max_warps = (
+        (int(tags.shape[0]), int(tags.shape[1])) if tags.ndim == 2 else (-1, -1)
+    )
+    geometry_ok = (
+        tags.ndim == 2
+        and n_windows == int(header.get("n_windows", -1))
+        and max_warps == int(header.get("max_warps", -1))
+        and arrays["n_warps"].shape == (n_windows,)
+        and arrays["elem_warp"].shape == (n_windows, window)
+        and arrays["elem_offset"].shape == (n_windows, window)
+        and arrays["elem_valid"].shape == (n_windows, window)
+    )
+    if not geometry_ok:
+        raise ScheduleCacheMismatch(
+            f"{path}: array shapes disagree with the header (corrupt file?)"
+        )
+    return BlockSchedule(
+        tags=jnp.asarray(arrays["tags"], jnp.int32),
+        n_warps=jnp.asarray(arrays["n_warps"], jnp.int32),
+        elem_warp=jnp.asarray(arrays["elem_warp"], jnp.int32),
+        elem_offset=jnp.asarray(arrays["elem_offset"], jnp.int32),
+        elem_valid=jnp.asarray(arrays["elem_valid"], bool),
+        window=window,
+        block_rows=block_rows,
+    )

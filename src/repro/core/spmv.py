@@ -63,7 +63,11 @@ def spmv_sell_coalesced(
 
     Routed through the engine cache (core.engine): repeat calls on the same
     matrix reuse one coalescer schedule and one compiled executable instead of
-    re-planning per call."""
+    re-planning per call. Pinned to the reference backend on every platform —
+    this function is the semantics oracle the pallas backend is checked
+    against, so it must never execute through the kernel it oracles."""
     from .engine import get_engine  # local import: engine builds on this module
 
-    return get_engine(sell, window=window, block_rows=block_rows).matvec(x)
+    return get_engine(
+        sell, window=window, block_rows=block_rows, backend="reference"
+    ).matvec(x)

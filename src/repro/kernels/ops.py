@@ -4,8 +4,14 @@ On TPU the kernels compile natively; everywhere else they run in
 ``interpret=True`` mode (Python-evaluated kernel bodies) so the whole library
 is testable on CPU. ``backend="jnp"`` falls through to the oracle — used by
 the framework when a call site is too small to justify a kernel launch.
+
+``REPRO_PALLAS_INTERPRET=1|0`` overrides the platform default — CI's
+interpret-mode job pins it to 1 so the kernel bodies are exercised on every
+push regardless of where the runner lands.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -15,8 +21,20 @@ from .coalesced_gather import coalesced_gather_pallas
 from .sell_spmv import sell_spmv_pallas
 
 
-def _interpret_default() -> bool:
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the pallas `interpret` flag: an explicit argument wins, then
+    the ``REPRO_PALLAS_INTERPRET`` env var, then "interpret everywhere but
+    TPU" (the only platform these kernels compile natively for)."""
+    if interpret is not None:
+        return bool(interpret)
+    env = (os.environ.get("REPRO_PALLAS_INTERPRET") or "").strip().lower()
+    if env:  # empty/unset falls through to the platform default
+        return env not in ("0", "false")
     return jax.default_backend() != "tpu"
+
+
+def _interpret_default() -> bool:
+    return resolve_interpret()
 
 
 def coalesced_gather(
@@ -28,6 +46,7 @@ def coalesced_gather(
     max_warps: int | None = None,
     schedule=None,
     backend: str = "pallas",
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     if backend == "jnp":
         return ref.coalesced_gather_ref(table, indices)
@@ -38,7 +57,7 @@ def coalesced_gather(
         block_rows=block_rows,
         max_warps=max_warps,
         schedule=schedule,
-        interpret=_interpret_default(),
+        interpret=resolve_interpret(interpret),
     )
 
 
@@ -52,6 +71,7 @@ def sell_spmv(
     max_warps: int | None = None,
     schedule=None,
     backend: str = "pallas",
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     if backend == "jnp":
         return ref.sell_spmv_ref(colidx, values, x)
@@ -63,5 +83,5 @@ def sell_spmv(
         block_rows=block_rows,
         max_warps=max_warps,
         schedule=schedule,
-        interpret=_interpret_default(),
+        interpret=resolve_interpret(interpret),
     )

@@ -77,7 +77,13 @@ def sell_spmv_pallas(
     A prebuilt `schedule` over the storage-order index stream (e.g. from
     core.engine.cached_block_schedule) skips per-call plan construction."""
     n_slices, W, H = colidx.shape
-    assert W % cols_per_chunk == 0, (W, cols_per_chunk)
+    if W % cols_per_chunk != 0:
+        raise ValueError(
+            f"sell_spmv consumes SELL in chunks of {cols_per_chunk} columns "
+            f"but the padded width is {W}; plan width-aware — pad W to a "
+            f"multiple of cols_per_chunk (core.engine.SpMVEngine with "
+            f"backend='pallas' does this at planning time)"
+        )
     n_chunks = W // cols_per_chunk
     window = cols_per_chunk * H
     # The indirect stream in storage order: slice-by-slice, column-major.

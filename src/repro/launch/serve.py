@@ -68,13 +68,24 @@ def serve_spmv(args) -> None:
     gen = _SPMV_MATRICES[args.spmv](args.spmv_rows)
     csr = gen(np.random.default_rng(args.seed))
     t0 = time.time()
-    engine = get_engine(csr, window=args.window, block_rows=args.block_rows)
+    engine = get_engine(
+        csr,
+        window=args.window,
+        block_rows=args.block_rows,
+        backend=args.backend,
+        cache_dir=args.schedule_cache,
+    )
     rep = engine.plan_report()  # forces the (lazy) schedule build
     plan_s = time.time() - t0
     print(
         f"spmv-serve: {args.spmv} {rep['n_rows']}x{rep['n_cols']} "
         f"nnz_padded={rep['nnz_padded']} planned in {plan_s:.3f}s "
         f"(schedule_cached={rep['schedule_cached']})"
+    )
+    print(
+        f"  backend: {rep['backend']} -> {rep['backend_resolved']} "
+        f"(cols_per_chunk={rep['cols_per_chunk']}, "
+        f"plan_width={rep['plan_width']})"
     )
     print(
         f"  plan: window={rep['window']} block_rows={rep['block_rows']} "
@@ -99,7 +110,22 @@ def serve_spmv(args) -> None:
         f"  served {args.requests} batches x {args.batch} RHS in {dt:.3f}s "
         f"({spmvs / dt:.1f} SpMV/s, {gflops:.3f} GFLOP/s equivalent)"
     )
-    print(f"  schedule cache: {schedule_cache_stats()}")
+    stats = schedule_cache_stats()
+    print(f"  schedule cache: {stats}")
+    if args.assert_warm_cache:
+        # CI's persistent-cache round trip: a process pointed at a warm
+        # on-disk cache must not plan from scratch even once.
+        if stats["built"] != 0:
+            raise SystemExit(
+                f"--assert-warm-cache: expected zero cold plans but "
+                f"build_block_schedule ran {stats['built']} time(s) "
+                f"(disk_hits={stats['disk_hits']}, "
+                f"disk_rejects={stats['disk_rejects']})"
+            )
+        print(
+            f"  warm-cache assertion OK: zero cold plans "
+            f"(disk_hits={stats['disk_hits']})"
+        )
 
 
 def main() -> None:
@@ -115,10 +141,29 @@ def main() -> None:
         "an LLM (routes through core.engine.SpMVEngine)",
     )
     ap.add_argument("--spmv-rows", type=int, default=8192)
-    ap.add_argument("--window", type=int, default=256)
+    ap.add_argument(
+        "--window", type=int, default=None,
+        help="coalescer window (default: 256 for the reference backend, "
+        "cols_per_chunk*slice_height for pallas)",
+    )
     ap.add_argument("--block-rows", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--backend", choices=("reference", "pallas", "auto"), default="auto",
+        help="SpMV execution backend (pallas runs the fused sell_spmv "
+        "kernel; interpret mode off-TPU)",
+    )
+    ap.add_argument(
+        "--schedule-cache", default=None, metavar="DIR",
+        help="persistent BlockSchedule cache directory (default: "
+        "$REPRO_SCHEDULE_CACHE); cold processes load known plans from here",
+    )
+    ap.add_argument(
+        "--assert-warm-cache", action="store_true",
+        help="exit nonzero unless this process planned zero schedules from "
+        "scratch (requires a warm --schedule-cache)",
+    )
     args = ap.parse_args()
 
     if args.spmv:

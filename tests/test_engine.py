@@ -149,6 +149,12 @@ def test_plan_report_contents():
     rep = eng.plan_report()
     assert rep["n_rows"] == 70 and rep["n_cols"] == 70
     assert rep["window"] == 64 and rep["block_rows"] == 8
+    # the default backend is "auto"; off-TPU it resolves to the reference
+    # executor with no plan-level width padding
+    assert rep["backend"] == "auto"
+    assert rep["backend_resolved"] in ("reference", "pallas")
+    if rep["backend_resolved"] == "reference":
+        assert rep["plan_width"] == rep["padded_width"]
     assert rep["wide_accesses"] > 0
     assert 0 < rep["coalesce_rate"]
     assert rep["n_windows"] == eng.schedule.n_windows

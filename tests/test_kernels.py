@@ -153,6 +153,23 @@ def test_mismatched_prebuilt_schedule_rejected():
         )
 
 
+def test_resolve_interpret_env_override(monkeypatch):
+    """Explicit arg > REPRO_PALLAS_INTERPRET > platform default; an empty
+    env var means unset, not "force native compile"."""
+    default = jax.default_backend() != "tpu"
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert ops.resolve_interpret() is default
+    assert ops.resolve_interpret(True) is True
+    assert ops.resolve_interpret(False) is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ops.resolve_interpret() is True
+    assert ops.resolve_interpret(False) is False  # arg wins
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ops.resolve_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "")
+    assert ops.resolve_interpret() is default
+
+
 def test_max_warps_reduction_still_correct():
     """Caller-provided max_warps >= true per-window uniques is sufficient."""
     idx = jnp.asarray((np.arange(512) % 64).astype(np.int32))  # 8 blocks only

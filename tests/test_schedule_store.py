@@ -1,0 +1,147 @@
+"""core.schedule_store: npz round-trip fidelity, digest/geometry validation,
+corrupt-file rejection, and deterministic digest-derived paths."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import schedule_store
+from repro.core.coalescer import build_block_schedule, trim_schedule_warps
+from repro.core.engine import stream_digest
+from repro.core.schedule_store import (
+    ScheduleCacheMismatch,
+    load_schedule,
+    plan_key_digest,
+    save_schedule,
+    schedule_path,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _schedule(n=500, rows=97, window=64, block_rows=8, trim=True):
+    idx = (RNG.integers(0, rows, size=n)).astype(np.int32)
+    sched = build_block_schedule(idx, window=window, block_rows=block_rows)
+    if trim:
+        sched = trim_schedule_warps(sched)
+    return idx, sched
+
+
+def test_round_trip_preserves_everything(tmp_path):
+    idx, sched = _schedule()
+    digest = stream_digest(idx)
+    path = schedule_path(str(tmp_path), digest, window=64, block_rows=8)
+    save_schedule(path, sched, stream_digest=digest, matrix_digest="m" * 64)
+    loaded = load_schedule(
+        path,
+        expect_stream_digest=digest,
+        expect_window=64,
+        expect_block_rows=8,
+        expect_matrix_digest="m" * 64,
+    )
+    assert loaded.window == sched.window
+    assert loaded.block_rows == sched.block_rows
+    for field in ("tags", "n_warps", "elem_warp", "elem_offset", "elem_valid"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(loaded, field)),
+            np.asarray(getattr(sched, field)),
+            err_msg=field,
+        )
+
+
+def test_path_is_deterministic_and_plan_keyed(tmp_path):
+    d = str(tmp_path)
+    assert schedule_path(d, "abc", window=64, block_rows=8) == schedule_path(
+        d, "abc", window=64, block_rows=8
+    )
+    # every plan parameter (and the stream + owning matrix) feeds the key
+    keys = {
+        plan_key_digest("abc", window=64, block_rows=8),
+        plan_key_digest("abc", window=32, block_rows=8),
+        plan_key_digest("abc", window=64, block_rows=4),
+        plan_key_digest("abc", window=64, block_rows=8, max_warps=16),
+        plan_key_digest("abd", window=64, block_rows=8),
+        plan_key_digest("abc", window=64, block_rows=8, matrix_digest="m1"),
+        plan_key_digest("abc", window=64, block_rows=8, matrix_digest="m2"),
+    }
+    assert len(keys) == 7
+
+
+def test_stream_digest_mismatch_rejected(tmp_path):
+    idx, sched = _schedule()
+    digest = stream_digest(idx)
+    path = schedule_path(str(tmp_path), digest, window=64, block_rows=8)
+    save_schedule(path, sched, stream_digest=digest)
+    with pytest.raises(ScheduleCacheMismatch, match="stream digest"):
+        load_schedule(path, expect_stream_digest="0" * 64)
+
+
+def test_matrix_digest_checked_only_when_both_present(tmp_path):
+    idx, sched = _schedule()
+    digest = stream_digest(idx)
+    path = os.path.join(str(tmp_path), "s.npz")
+    save_schedule(path, sched, stream_digest=digest, matrix_digest="a" * 64)
+    with pytest.raises(ScheduleCacheMismatch, match="matrix digest"):
+        load_schedule(path, expect_matrix_digest="b" * 64)
+    # a file saved without matrix context is valid for any matrix whose
+    # stream matches (stream identity is what correctness requires)
+    path2 = os.path.join(str(tmp_path), "s2.npz")
+    save_schedule(path2, sched, stream_digest=digest)
+    load_schedule(path2, expect_matrix_digest="b" * 64)
+
+
+def test_geometry_mismatch_rejected(tmp_path):
+    idx, sched = _schedule(window=64, block_rows=8)
+    digest = stream_digest(idx)
+    path = os.path.join(str(tmp_path), "s.npz")
+    save_schedule(path, sched, stream_digest=digest)
+    with pytest.raises(ScheduleCacheMismatch, match="window"):
+        load_schedule(path, expect_window=32)
+    with pytest.raises(ScheduleCacheMismatch, match="block_rows"):
+        load_schedule(path, expect_block_rows=4)
+
+
+def test_corrupt_and_wrong_version_files_rejected(tmp_path):
+    idx, sched = _schedule()
+    digest = stream_digest(idx)
+    garbage = os.path.join(str(tmp_path), "garbage.npz")
+    with open(garbage, "wb") as f:
+        f.write(b"not an npz at all")
+    with pytest.raises(ScheduleCacheMismatch, match="unreadable"):
+        load_schedule(garbage)
+
+    # truncated arrays disagreeing with the header
+    path = os.path.join(str(tmp_path), "s.npz")
+    save_schedule(path, sched, stream_digest=digest)
+    with np.load(path, allow_pickle=False) as z:
+        data = {k: z[k] for k in z.files}
+    data["tags"] = np.asarray(data["tags"])[:-1]  # drop a window
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **data)
+    with pytest.raises(ScheduleCacheMismatch, match="shapes"):
+        load_schedule(path)
+
+    # future store version
+    save_schedule(path, sched, stream_digest=digest)
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files if k != "header"}
+        header = json.loads(z["header"].item())
+    header["version"] = 999
+    with open(path, "wb") as f:
+        np.savez_compressed(f, header=json.dumps(header), **arrays)
+    with pytest.raises(ScheduleCacheMismatch, match="version"):
+        load_schedule(path)
+
+
+def test_save_creates_directories_and_is_atomic(tmp_path):
+    idx, sched = _schedule()
+    digest = stream_digest(idx)
+    nested = os.path.join(str(tmp_path), "a", "b")
+    path = schedule_path(nested, digest, window=64, block_rows=8)
+    save_schedule(path, sched, stream_digest=digest)
+    assert os.path.exists(path)
+    # no temp droppings left behind
+    assert all(
+        not name.endswith(".tmp") for name in os.listdir(nested)
+    )
