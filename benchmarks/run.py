@@ -2,10 +2,11 @@
 ``name,us_per_call,derived`` CSV rows. `BENCH_SCALE=ci|bench|paper` controls
 matrix sizes (default bench). ``--smoke`` forces the tiny ci scale and runs a
 quick subset (fig5 + engine cache + kernel microbench + the backend parity
-gate) — the CI fast pass. The smoke pass writes ``BENCH_smoke.json`` (all
-emitted rows + per-matrix pallas-vs-reference max abs error) and exits
-nonzero if any parity error exceeds `PARITY_TOL` — CI uploads the file as a
-workflow artifact and fails on the gate."""
+gate + sharded-vs-single-device matmat) — the CI fast pass. The smoke pass
+writes ``BENCH_smoke.json`` (all emitted rows, per-matrix pallas-vs-reference
+max abs error, and the sharded-engine mesh/parity) and exits nonzero if any
+parity error exceeds `PARITY_TOL` — CI uploads the file as a workflow
+artifact (single- and multi-device variants) and fails on the gate."""
 from __future__ import annotations
 
 import argparse
@@ -87,6 +88,54 @@ def _backend_parity_check() -> dict:
     return errors
 
 
+def _sharded_smoke() -> dict:
+    """Sharded-vs-single-device matmat rows + the decomposition parity gate.
+
+    On a single-device host the mesh degenerates to (1, 1) and the row is a
+    pure overhead measurement; under the CI multi-device job
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the same code
+    exercises real row-shard/column-group placement. Parity is gated either
+    way: the sharded reference path must match the single-device engine (the
+    decomposition is exact, so the expected error is 0.0)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.dist import ShardedSpMVEngine
+    from repro.core.engine import SpMVEngine
+    from repro.core.formats import csr_to_sell
+    from repro.core.matrices import banded
+    from .common import emit, timed
+
+    csr = banded(1024, 16, 0.7)(np.random.default_rng(0))
+    sell = csr_to_sell(csr)
+    k = 8
+    X = jnp.asarray(
+        np.random.default_rng(1).standard_normal((sell.n_cols, k))
+        .astype(np.float32)
+    )
+    single = SpMVEngine(sell, backend="reference")
+    _, us_single = timed(lambda: single.matmat(X).block_until_ready())
+    sharded = ShardedSpMVEngine(sell, backend="reference")
+    _, us_sharded = timed(lambda: jax.block_until_ready(sharded.matmat(X)))
+    err = float(
+        np.abs(
+            np.asarray(sharded.matmat(X)) - np.asarray(single.matmat(X))
+        ).max()
+    )
+    d, m = sharded.n_data, sharded.n_model
+    emit("sharded/matmat/single_device", us_single, f"n={sell.n_rows};k={k}")
+    emit(
+        f"sharded/matmat/mesh_{d}x{m}", us_sharded,
+        f"n={sell.n_rows};k={k};shards={sharded.n_shards};"
+        f"devices={d * m};max_abs_err={err:.2e}",
+    )
+    return {
+        "mesh": [d, m],
+        "n_shards": sharded.n_shards,
+        "max_abs_err": err,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -106,12 +155,14 @@ def main() -> None:
         engine_cache.run()
         _kernel_microbench()
         parity = _backend_parity_check()
+        sharded = _sharded_smoke()
         total_s = time.time() - t0
         payload = {
             "scale": os.environ.get("BENCH_SCALE", "ci"),
             "total_s": round(total_s, 1),
             "parity_tol": PARITY_TOL,
             "backend_parity": parity,
+            "sharded": sharded,
             "rows": common.rows(),
         }
         with open(SMOKE_JSON, "w") as f:
@@ -120,9 +171,11 @@ def main() -> None:
         print(f"# total {total_s:.1f}s (smoke)")
         # NaN must fail too, hence the negated <= rather than a >.
         bad = {k: v for k, v in parity.items() if not (v <= PARITY_TOL)}
+        if not (sharded["max_abs_err"] <= PARITY_TOL):
+            bad["sharded-vs-single-device"] = sharded["max_abs_err"]
         if bad:
             print(
-                f"# PARITY FAILURE: pallas-vs-reference error exceeds "
+                f"# PARITY FAILURE: error exceeds "
                 f"{PARITY_TOL:.0e} on {sorted(bad)}: {bad}",
                 file=sys.stderr,
             )

@@ -27,8 +27,14 @@ from .engine import (  # noqa: F401
     engine_cache_stats,
     get_engine,
     resolve_backend,
+    resolve_window,
     schedule_cache_stats,
     stream_digest,
+)
+from .dist import (  # noqa: F401
+    ShardedSpMVEngine,
+    column_groups,
+    row_shard_sells,
 )
 from .schedule_store import (  # noqa: F401
     CACHE_DIR_ENV,

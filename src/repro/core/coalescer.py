@@ -149,8 +149,10 @@ class BlockSchedule:
                  (the inverse Hitmap).
     elem_offset: (n_windows, window) int32 — row offset within the wide block
                  (the CSHR Offsets field).
-    Padding elements (stream tail) point at warp 0 offset 0 and are masked by
-    `elem_valid`.
+    Padding elements (stream tail) are masked by `elem_valid` and never
+    allocate warps of their own: a partial final window issues exactly the
+    wide accesses the CSHR watchdog flush would (pad lanes are remapped onto
+    the window's first valid block, offset 0).
     """
 
     tags: jnp.ndarray
@@ -180,12 +182,22 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def _schedule_one_window(win: jnp.ndarray, block_rows: int, max_warps: int):
+def _schedule_one_window(
+    win: jnp.ndarray, valid: jnp.ndarray, block_rows: int, max_warps: int
+):
     blocks = win // block_rows
+    # Tail-padding lanes must not mint warps: the CSHR watchdog flushes a
+    # partial window after serving only its real requests, so a pad lane that
+    # seeded its own tag would issue a wide fetch the hardware never makes.
+    # Remap invalid lanes onto the window's first valid block before tag
+    # generation (they still resolve to an in-range (warp, offset) pair, and
+    # `elem_valid` masks them out of any consumer that looks).
+    first = blocks[jnp.argmax(valid)]
+    blocks = jnp.where(valid, blocks, first)
     tags, n = _unique_padded(blocks, max_warps)
     # warp id of each element = position of its block in the sorted unique tags
     elem_warp = jnp.searchsorted(tags, blocks).astype(jnp.int32)
-    elem_offset = (win % block_rows).astype(jnp.int32)
+    elem_offset = jnp.where(valid, win % block_rows, 0).astype(jnp.int32)
     return tags.astype(jnp.int32), n.astype(jnp.int32), elem_warp, elem_offset
 
 
@@ -197,7 +209,9 @@ def build_block_schedule(
     max_warps: int | None = None,
 ) -> BlockSchedule:
     """Vectorized (vmapped) schedule over all windows. `indices` is 1-D; the
-    tail is padded with index 0 (valid=False). jit-safe for fixed shapes."""
+    tail is padded (valid=False) without contributing warps, so `n_warps`
+    agrees with the CSHR trace even on partial final windows. jit-safe for
+    fixed shapes."""
     indices = jnp.asarray(indices)
     n = indices.shape[0]
     n_windows = max(1, -(-n // window))
@@ -209,8 +223,8 @@ def build_block_schedule(
     if max_warps is None:
         max_warps = window  # always sufficient
     tags, n_warps, elem_warp, elem_offset = jax.vmap(
-        lambda w: _schedule_one_window(w, block_rows, max_warps)
-    )(idx_p)
+        lambda w, v: _schedule_one_window(w, v, block_rows, max_warps)
+    )(idx_p, valid.reshape(n_windows, window))
     return BlockSchedule(
         tags=tags,
         n_warps=n_warps,

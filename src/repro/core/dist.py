@@ -1,0 +1,342 @@
+"""Sharded multi-device SpMV: row-slice partitioning over a device mesh.
+
+The paper's coalescer wins come from exploiting memory-level parallelism
+across independent index windows (Sec. II-B); the scale-out of that idea is
+to hand *disjoint groups of windows* to different memory systems. SparseP
+(Giannoula et al., 2022) shows the 1D partitioning of the sparse matrix
+across near-memory banks is the decisive design axis, and Serpens (Song et
+al., 2022) earns its HBM bandwidth by striping sparse rows across channels.
+`ShardedSpMVEngine` maps that decomposition onto a `jax.sharding` mesh:
+
+  * **Row shards over the ``data`` axis.** The SELL matrix is partitioned by
+    row-slices into contiguous shards (balanced by slice count; shard counts
+    that don't divide `n_slices` are fine). Every shard keeps the *global*
+    padded width, so each shard's per-row reduction is shape-identical to the
+    single-device engine's — the decomposition is numerically invisible
+    (bit-identical on the reference backend, pinned by tests).
+  * **One plan per shard.** Each shard is a real `SELLMatrix` owned by a real
+    `SpMVEngine`: its own padded plan, its own content-addressed
+    `BlockSchedule` (the shard's index stream has its own digest), its own
+    persistent npz file when a cache directory is configured — schedule
+    digests and persistence compose per shard with zero new cache machinery.
+  * **RHS columns over the ``model`` axis.** `matmat` splits the right-hand
+    sides into balanced column groups; block (shard ``i``, column group
+    ``j``) is dispatched on mesh device ``(i % data, j)`` via `jax.device_put`
+    placement — JAX's async dispatch runs all blocks concurrently, the exact
+    multi-device generalization of the engine's vmap-over-columns. ``x`` is
+    replicated (the schedule-driven x-gather stays local to each shard's
+    device, which is the point: the interesting communication is the
+    broadcast of x, not the index traffic).
+
+The mesh comes from `launch.mesh.make_host_mesh` by default, so the same
+code path runs on a laptop CPU, a forced multi-device CPU
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — what tests and CI
+use), and a TPU slice. More shards than mesh rows is allowed (shards
+round-robin over the ``data`` axis), so shard-decomposition logic is
+exercised even on a single device.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coalescer import coalesce_stats
+from .engine import DEFAULT_COLS_PER_CHUNK, get_engine, resolve_backend
+from .formats import CSRMatrix, SELLMatrix, csr_to_sell
+
+
+def _default_mesh() -> jax.sharding.Mesh:
+    """Host mesh over whatever devices exist (shared auto-factoring rule —
+    local import keeps core importable without the launch package loaded)."""
+    from repro.launch.mesh import auto_spmv_mesh
+
+    return auto_spmv_mesh()
+
+
+def row_shard_sells(
+    sell: SELLMatrix, n_shards: int
+) -> List[Tuple[SELLMatrix, int, int]]:
+    """Partition a SELL matrix into `n_shards` contiguous row-slice shards.
+
+    Returns ``[(shard_sell, row_lo, row_hi), ...]`` with ``row_lo/row_hi``
+    the half-open global row range the shard owns. Slices are split balanced
+    (`np.array_split` semantics — uneven counts allowed) and every shard is
+    padded to the *global* maximum slice width, so per-row reductions keep
+    the exact shape (and therefore bit pattern) of the unsharded engine.
+    """
+    from .spmv import _sell_padded  # local: spmv imports engine which is a sib
+
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n_shards = min(n_shards, sell.n_slices) or 1
+    ci, va, W = _sell_padded(sell)  # (n_slices, W, H)
+    H = sell.slice_height
+    bounds = np.linspace(0, sell.n_slices, n_shards + 1).astype(int)
+    shards: List[Tuple[SELLMatrix, int, int]] = []
+    for k in range(n_shards):
+        s0, s1 = int(bounds[k]), int(bounds[k + 1])
+        nsl = s1 - s0
+        shard = SELLMatrix(
+            n_rows=min(sell.n_rows, s1 * H) - s0 * H,
+            n_cols=sell.n_cols,
+            slice_height=H,
+            slice_ptrs=np.arange(nsl + 1, dtype=np.int64) * (W * H),
+            slice_widths=np.full(nsl, W, dtype=np.int32),
+            colidx=np.ascontiguousarray(ci[s0:s1].reshape(-1)),
+            values=np.ascontiguousarray(va[s0:s1].reshape(-1)),
+        )
+        shard.validate()
+        shards.append((shard, s0 * H, min(sell.n_rows, s1 * H)))
+    return shards
+
+
+def column_groups(k: int, n_groups: int) -> List[slice]:
+    """Balanced contiguous split of `k` RHS columns into at most `n_groups`
+    non-empty slices (fewer when k < n_groups — the k=1 edge keeps one
+    group and leaves the rest of the model axis idle)."""
+    n_groups = max(1, min(n_groups, k)) if k else 1
+    bounds = np.linspace(0, k, n_groups + 1).astype(int)
+    return [
+        slice(int(bounds[j]), int(bounds[j + 1]))
+        for j in range(n_groups)
+        if bounds[j + 1] > bounds[j]
+    ]
+
+
+class ShardedSpMVEngine:
+    """Plan-once / execute-many SpMV sharded across a device mesh.
+
+    ``matrix`` may be CSR (converted once, like `SpMVEngine`) or SELL.
+    ``mesh`` must carry ``data`` and ``model`` axes (default: a host mesh
+    over all visible devices via `launch.mesh.make_host_mesh`). Row shards
+    map to the ``data`` axis, RHS column groups to the ``model`` axis.
+    ``n_shards`` defaults to the ``data`` axis size; larger values
+    round-robin shards over the mesh rows.
+
+    All plan parameters (``window``, ``block_rows``, ``backend``,
+    ``cols_per_chunk``, ``cache_dir``) are forwarded to every shard's
+    `SpMVEngine`, so backends, window resolution, the content-addressed
+    schedule cache, and npz persistence all behave exactly as on the
+    single-device engine — per shard.
+    """
+
+    def __init__(
+        self,
+        matrix: Union[CSRMatrix, SELLMatrix],
+        *,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        n_shards: Optional[int] = None,
+        window: Optional[int] = None,
+        block_rows: int = 8,
+        slice_height: Optional[int] = None,
+        width_multiple: int = 1,
+        backend: str = "auto",
+        cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
+        cache_dir: Optional[str] = None,
+    ):
+        if isinstance(matrix, CSRMatrix):
+            matrix.validate()
+            kw = {} if slice_height is None else {"slice_height": slice_height}
+            sell = csr_to_sell(matrix, width_multiple=width_multiple, **kw)
+        elif isinstance(matrix, SELLMatrix):
+            sell = matrix
+            sell.validate()
+        else:
+            raise TypeError(
+                f"expected CSRMatrix or SELLMatrix, got {type(matrix)}"
+            )
+        self.sell = sell
+        self.mesh = mesh if mesh is not None else _default_mesh()
+        names = self.mesh.axis_names
+        if "data" not in names or "model" not in names:
+            raise ValueError(
+                f"mesh must carry 'data' and 'model' axes, got {names!r}"
+            )
+        # Device grid as (data, model), whatever the mesh's axis order.
+        order = [names.index("data"), names.index("model")]
+        extra = [i for i in range(len(names)) if i not in order]
+        for i in extra:
+            if self.mesh.devices.shape[i] != 1:
+                raise ValueError(
+                    f"mesh axis {names[i]!r} has size "
+                    f"{self.mesh.devices.shape[i]}; only 'data' and 'model' "
+                    f"may be > 1 for the sharded SpMV engine"
+                )
+        grid = np.transpose(self.mesh.devices, order + extra)
+        self.devices = grid.reshape(grid.shape[0], grid.shape[1])
+        self.n_data, self.n_model = self.devices.shape
+
+        self.backend = backend
+        self.backend_resolved = resolve_backend(backend)
+        self.block_rows = int(block_rows)
+        self.window = window
+        self.n_shards = (
+            self.n_data if n_shards is None else int(n_shards)
+        )
+        self._shards = row_shard_sells(sell, self.n_shards)
+        self.n_shards = len(self._shards)  # clamped to n_slices
+        # Through the engine cache: two sharded engines over the same matrix
+        # (or a sharded engine rebuilt per request) share shard engines —
+        # and therefore plans and compiled executables — by content digest.
+        self.engines = [
+            get_engine(
+                shard,
+                window=window,
+                block_rows=block_rows,
+                backend=backend,
+                cols_per_chunk=cols_per_chunk,
+                cache_dir=cache_dir,
+            )
+            for shard, _, _ in self._shards
+        ]
+        self.row_ranges = [(lo, hi) for _, lo, hi in self._shards]
+
+    # -- placement ---------------------------------------------------------
+
+    def _shard_device_row(self, i: int) -> int:
+        return i % self.n_data
+
+    def placement(self, k: int) -> List[Dict[str, object]]:
+        """The (shard, column-group) -> device assignment `matmat(X)` with
+        ``X.shape[1] == k`` will use. One entry per dispatched block; serving
+        loops use this for per-device accounting."""
+        groups = column_groups(k, self.n_model)
+        out: List[Dict[str, object]] = []
+        for i, (lo, hi) in enumerate(self.row_ranges):
+            for j, cols in enumerate(groups):
+                out.append({
+                    "shard": i,
+                    "device": self.devices[self._shard_device_row(i), j],
+                    "rows": (lo, hi),
+                    "cols": (cols.start, cols.stop),
+                })
+        return out
+
+    # -- execution ---------------------------------------------------------
+
+    def matvec(self, x: jnp.ndarray) -> np.ndarray:
+        """y = A @ x: replicate x across the data axis, each shard computes
+        its row block on its own device, concatenate. Returns the gathered
+        result as a host array (re-uploading the assembled output to one
+        device on every call would be pure wasted transfer — callers that
+        want it on-device `device_put` it themselves)."""
+        x = jnp.asarray(x)
+        if x.ndim != 1 or x.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"matvec expects x of shape ({self.sell.n_cols},), got "
+                f"{x.shape}"
+            )
+        placed: Dict[int, jnp.ndarray] = {}  # one x transfer per device row
+        parts = []
+        for i, eng in enumerate(self.engines):
+            d = self._shard_device_row(i)
+            if d not in placed:
+                placed[d] = jax.device_put(x, self.devices[d, 0])
+            parts.append(eng.matvec(placed[d]))
+        # dispatched async; the host gather below synchronizes
+        return np.concatenate([np.asarray(p) for p in parts])
+
+    def matmat(self, X: jnp.ndarray) -> np.ndarray:
+        """Y = A @ X with row shards on the ``data`` axis and RHS column
+        groups on the ``model`` axis. Every (shard, column-group) block is
+        dispatched before any result is gathered, so all mesh devices run
+        concurrently. Bit-identical per column to the single-device engine
+        on the reference backend. Returns the gathered result as a host
+        array (see `matvec`)."""
+        X = jnp.asarray(X)
+        if X.ndim != 2 or X.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"matmat expects X of shape ({self.sell.n_cols}, k), got "
+                f"{X.shape}"
+            )
+        k = int(X.shape[1])
+        if k == 0:
+            return np.zeros((self.sell.n_rows, 0), X.dtype)
+        groups = column_groups(k, self.n_model)
+        # One transfer per (device row, column group): shards that round-robin
+        # onto the same mesh row share the placed RHS block instead of
+        # re-sending identical host->device traffic per shard.
+        placed: Dict[Tuple[int, int], jnp.ndarray] = {}
+        blocks: List[List[jnp.ndarray]] = []
+        for i, eng in enumerate(self.engines):
+            d = self._shard_device_row(i)
+            row_blocks = []
+            for j, cols in enumerate(groups):
+                if (d, j) not in placed:
+                    placed[(d, j)] = jax.device_put(
+                        X[:, cols], self.devices[d, j]
+                    )
+                row_blocks.append(eng.matmat(placed[(d, j)]))
+            blocks.append(row_blocks)
+        # All blocks are in flight; now gather (device->host copies sync).
+        rows = [
+            np.concatenate([np.asarray(b) for b in row], axis=1)
+            if len(row) > 1 else np.asarray(row[0])
+            for row in blocks
+        ]
+        return np.concatenate(rows, axis=0)
+
+    def __call__(self, x: jnp.ndarray) -> np.ndarray:
+        return self.matvec(x) if jnp.asarray(x).ndim == 1 else self.matmat(x)
+
+    # -- introspection / persistence ---------------------------------------
+
+    def persist_schedules(self, cache_dir: Optional[str] = None) -> List[str]:
+        """Write every shard's already-built schedule to the persistent
+        store (see `SpMVEngine.persist_schedule`). Returns written paths."""
+        paths = [eng.persist_schedule(cache_dir) for eng in self.engines]
+        return [p for p in paths if p is not None]
+
+    def plan_report(self) -> Dict[str, object]:
+        """Aggregate plan report plus per-shard coalesce stats.
+
+        Forces planning on every shard. ``shards[i]`` reports the rows the
+        shard owns, its stream's wide-access count and coalesce rate, its
+        schedule geometry, and whether its plan came out of the cache —
+        the per-memory-bank view of the paper's Sec. II-B statistics.
+        """
+        shard_reports: List[Dict[str, object]] = []
+        total_wide = 0
+        total_elems = 0
+        for i, eng in enumerate(self.engines):
+            sched = eng.schedule  # force the plan
+            _, _, stream, _, _ = eng._ensure_plan()
+            wide, rate = coalesce_stats(
+                stream, window=eng.window, block_rows=eng.block_rows
+            )
+            total_wide += wide
+            total_elems += int(stream.size)
+            lo, hi = self.row_ranges[i]
+            shard_reports.append({
+                "shard": i,
+                "rows": (lo, hi),
+                "n_slices": eng.sell.n_slices,
+                "nnz_padded": eng.sell.nnz_padded,
+                "window": eng.window,
+                "n_windows": sched.n_windows,
+                "max_warps": sched.max_warps,
+                "wide_accesses": wide,
+                "coalesce_rate": rate,
+                "schedule_cached": eng.plan_cached,
+                "device_row": self._shard_device_row(i),
+            })
+        return {
+            "n_rows": self.sell.n_rows,
+            "n_cols": self.sell.n_cols,
+            "nnz_padded": self.sell.nnz_padded,
+            "backend": self.backend,
+            "backend_resolved": self.backend_resolved,
+            "mesh": {"data": self.n_data, "model": self.n_model},
+            "n_devices": int(self.devices.size),
+            "n_shards": self.n_shards,
+            "block_rows": self.block_rows,
+            "wide_accesses": total_wide,
+            "coalesce_rate": (
+                float(total_elems) / float(total_wide * self.block_rows)
+                if total_wide else 0.0
+            ),
+            "shards": shard_reports,
+        }

@@ -47,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import threading
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple, Union
 
@@ -75,6 +76,34 @@ def resolve_backend(backend: str) -> str:
         return "pallas" if jax.default_backend() == "tpu" else "reference"
     return backend
 
+
+def resolve_window(
+    window: Optional[int],
+    *,
+    backend_resolved: str,
+    cols_per_chunk: int,
+    slice_height: int,
+) -> int:
+    """The engine's window-resolution rule, shared by `SpMVEngine.__init__`
+    and the `get_engine` cache key: the pallas backend structurally plans one
+    (slice, chunk) per window (an explicit window that fights that geometry
+    raises), the reference backend defaults to `DEFAULT_WINDOW`. Keying the
+    engine cache on the *resolved* window means every spelling of the same
+    plan — ``window=None``, an explicit 256 (reference), an explicit
+    ``cols_per_chunk * slice_height`` (pallas) — lands on one engine instead
+    of building duplicate schedules and duplicate jit compiles."""
+    if backend_resolved == "pallas":
+        kernel_window = int(cols_per_chunk) * int(slice_height)
+        if window is not None and int(window) != kernel_window:
+            raise ValueError(
+                f"backend='pallas' plans one (slice, chunk) per window: "
+                f"window = cols_per_chunk * slice_height = {kernel_window}"
+                f", but window={window} was requested (pass window=None "
+                f"to derive it, or change cols_per_chunk)"
+            )
+        return kernel_window
+    return DEFAULT_WINDOW if window is None else int(window)
+
 # ---------------------------------------------------------------------------
 # Content-addressed schedule cache
 # ---------------------------------------------------------------------------
@@ -84,45 +113,91 @@ _ENGINE_CACHE_MAX = 32  # > the 20-matrix benchmark suite, so one pass fits
 
 
 class _LRUCache:
-    """Tiny bounded LRU with hit/miss counters (OrderedDict-backed)."""
+    """Tiny bounded LRU with hit/miss counters (OrderedDict-backed).
+
+    Thread-safe: the serving loop this repo is growing toward calls
+    `get_engine` from multiple request threads, and an unguarded
+    OrderedDict mutates (`move_to_end` + `popitem`) under every get/put."""
 
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
         self._d: "OrderedDict[object, object]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
-    def get(self, key):
-        if key in self._d:
-            self._d.move_to_end(key)
-            self.hits += 1
-            return self._d[key]
-        self.misses += 1
-        return None
+    def get(self, key, *, count: bool = True):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                if count:
+                    self.hits += 1
+                return self._d[key]
+            if count:
+                self.misses += 1
+            return None
 
     def put(self, key, value) -> None:
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
 
     def clear(self) -> None:
-        self._d.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._d.clear()
+            self.hits = 0
+            self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
 
 _schedule_cache = _LRUCache(_SCHEDULE_CACHE_MAX)
 _engine_cache = _LRUCache(_ENGINE_CACHE_MAX)
+# Serializes the miss path of `get_engine` (lookup + construct + insert):
+# engine construction is cheap (planning/compilation are lazy), and holding
+# one lock guarantees concurrent callers with the same key observe a single
+# engine object rather than racing two into existence.
+_engine_lock = threading.RLock()
 
 # Plan-construction counters, distinct from the LRU's hit/miss pair: `built`
 # counts actual `build_block_schedule` invocations (the cost persistence
 # exists to avoid), the disk_* counters observe the persistent layer. The CI
 # round-trip gate asserts built == 0 for a cold process with a warm disk cache.
 _plan_stats = {"built": 0, "disk_hits": 0, "disk_rejects": 0, "disk_saves": 0}
+_plan_stats_lock = threading.Lock()
+
+# Per-plan-key build locks: concurrent planners of the *same* stream
+# serialize (one builds, the rest get the cached object — preserving the
+# identity guarantee under threads), while unrelated plans build in
+# parallel. Reentrant: the memory-hit write-through also takes its plan's
+# lock, including from inside the locked build path. The table is bounded
+# (generously above the schedule LRU) so a long-lived process planning an
+# unbounded stream of distinct matrices doesn't leak a lock per plan ever
+# seen; evicting a lock another thread still holds only means two builders
+# of that plan may race once, which is benign (last put wins).
+_BUILD_LOCKS_MAX = 4 * _SCHEDULE_CACHE_MAX
+_build_locks: "OrderedDict[object, threading.RLock]" = OrderedDict()
+_build_locks_guard = threading.Lock()
+
+
+def _bump(counter: str, by: int = 1) -> None:
+    with _plan_stats_lock:
+        _plan_stats[counter] += by
+
+
+def _build_lock_for(key) -> threading.RLock:
+    with _build_locks_guard:
+        lock = _build_locks.get(key)
+        if lock is None:
+            lock = _build_locks[key] = threading.RLock()
+        _build_locks.move_to_end(key)
+        while len(_build_locks) > _BUILD_LOCKS_MAX:
+            _build_locks.popitem(last=False)
+        return lock
 
 
 def stream_digest(indices: np.ndarray) -> str:
@@ -158,64 +233,121 @@ def cached_block_schedule(
     the persistent store before planning, and fresh plans are written back —
     digest-named npz files validated on load (stream digest always;
     `matrix_digest` too when both sides carry one). Disk hits count as
-    ``was_cached=True``: the plan was not rebuilt.
+    ``was_cached=True``: the plan was not rebuilt. An in-memory *hit* still
+    writes through to the store when the file is missing (a plan built before
+    the directory was configured must not be lost to the next process).
     """
     digest = stream_digest(indices)
     key = (digest, window, block_rows, max_warps)
     sched = _schedule_cache.get(key)
     if sched is not None:
+        _write_through_if_missing(
+            sched, digest, window=window, block_rows=block_rows,
+            max_warps=max_warps, cache_dir=cache_dir,
+            matrix_digest=matrix_digest,
+        )
         return sched, True
 
-    cache_dir = schedule_store.resolve_cache_dir(cache_dir)
-    path = None
-    if cache_dir:
-        path = schedule_store.schedule_path(
-            cache_dir, digest, window=window, block_rows=block_rows,
-            max_warps=max_warps, matrix_digest=matrix_digest,
-        )
-        if os.path.exists(path):
-            try:
-                sched = schedule_store.load_schedule(
-                    path,
-                    expect_stream_digest=digest,
-                    expect_window=window,
-                    expect_block_rows=block_rows,
-                    expect_matrix_digest=matrix_digest,
-                )
-                _plan_stats["disk_hits"] += 1
-                _schedule_cache.put(key, sched)
-                return sched, True
-            except schedule_store.ScheduleCacheMismatch:
-                _plan_stats["disk_rejects"] += 1
+    with _build_lock_for(key):
+        # A concurrent planner of the same stream may have finished while we
+        # waited; the re-check keeps the identity guarantee under threads.
+        sched = _schedule_cache.get(key, count=False)
+        if sched is not None:
+            _write_through_if_missing(
+                sched, digest, window=window, block_rows=block_rows,
+                max_warps=max_warps, cache_dir=cache_dir,
+                matrix_digest=matrix_digest,
+            )
+            return sched, True
 
-    sched = build_block_schedule(
-        jnp.asarray(np.asarray(indices, dtype=np.int32)),
-        window=window,
-        block_rows=block_rows,
-        max_warps=max_warps,
-    )
-    # Materialize now: the cache must hand out ready metadata, not lazy traces.
-    sched = jax.tree_util.tree_map(
-        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready") else a,
-        sched,
-    )
-    sched = trim_schedule_warps(sched)
-    _plan_stats["built"] += 1
-    _schedule_cache.put(key, sched)
-    if path is not None:
-        schedule_store.save_schedule(
-            path, sched, stream_digest=digest, matrix_digest=matrix_digest
+        cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+        path = None
+        if cache_dir:
+            path = schedule_store.schedule_path(
+                cache_dir, digest, window=window, block_rows=block_rows,
+                max_warps=max_warps, matrix_digest=matrix_digest,
+            )
+            if os.path.exists(path):
+                try:
+                    sched = schedule_store.load_schedule(
+                        path,
+                        expect_stream_digest=digest,
+                        expect_window=window,
+                        expect_block_rows=block_rows,
+                        expect_matrix_digest=matrix_digest,
+                    )
+                    _bump("disk_hits")
+                    _schedule_cache.put(key, sched)
+                    return sched, True
+                except schedule_store.ScheduleCacheMismatch:
+                    _bump("disk_rejects")
+
+        sched = build_block_schedule(
+            jnp.asarray(np.asarray(indices, dtype=np.int32)),
+            window=window,
+            block_rows=block_rows,
+            max_warps=max_warps,
         )
-        _plan_stats["disk_saves"] += 1
-    return sched, False
+        # Materialize now: the cache must hand out ready metadata, not lazy
+        # traces.
+        sched = jax.tree_util.tree_map(
+            lambda a: a.block_until_ready()
+            if hasattr(a, "block_until_ready") else a,
+            sched,
+        )
+        sched = trim_schedule_warps(sched)
+        _bump("built")
+        _schedule_cache.put(key, sched)
+        if path is not None:
+            schedule_store.save_schedule(
+                path, sched, stream_digest=digest, matrix_digest=matrix_digest
+            )
+            _bump("disk_saves")
+        return sched, False
+
+
+def _write_through_if_missing(
+    sched: BlockSchedule,
+    digest: str,
+    *,
+    window: int,
+    block_rows: int,
+    max_warps: Optional[int],
+    cache_dir: Optional[str],
+    matrix_digest: Optional[str],
+) -> None:
+    """Persist an in-memory-cached plan whose file does not exist yet.
+
+    Without this, a plan built before `cache_dir`/`$REPRO_SCHEDULE_CACHE` was
+    configured would return on the memory-hit fast path forever and never
+    reach disk for direct `cached_block_schedule` callers
+    (`SpMVEngine.persist_schedule` only covers the engine path)."""
+    cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+    if cache_dir is None:
+        return
+    path = schedule_store.schedule_path(
+        cache_dir, digest, window=window, block_rows=block_rows,
+        max_warps=max_warps, matrix_digest=matrix_digest,
+    )
+    # The plan's build lock makes the exists-check + save atomic: two
+    # concurrent hitters must produce exactly one file and one disk_saves
+    # bump (the write itself is atomic either way; the counter isn't).
+    with _build_lock_for((digest, window, block_rows, max_warps)):
+        if not os.path.exists(path):
+            schedule_store.save_schedule(
+                path, sched, stream_digest=digest, matrix_digest=matrix_digest
+            )
+            _bump("disk_saves")
 
 
 def schedule_cache_stats() -> Dict[str, int]:
+    with _plan_stats_lock:
+        snapshot = dict(_plan_stats)
     return {
         "size": len(_schedule_cache),
         "hits": _schedule_cache.hits,
         "misses": _schedule_cache.misses,
-        **_plan_stats,
+        **snapshot,
     }
 
 
@@ -223,8 +355,9 @@ def clear_schedule_cache() -> None:
     """Empty the in-memory schedule cache and zero all counters (including
     the plan/disk counters — on-disk files are untouched)."""
     _schedule_cache.clear()
-    for k in _plan_stats:
-        _plan_stats[k] = 0
+    with _plan_stats_lock:
+        for k in _plan_stats:
+            _plan_stats[k] = 0
 
 
 def clear_engine_cache() -> None:
@@ -344,18 +477,12 @@ class SpMVEngine:
         self.block_rows = int(block_rows)
         self.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
 
-        kernel_window = self.cols_per_chunk * sell.slice_height
-        if self.backend_resolved == "pallas":
-            if window is not None and int(window) != kernel_window:
-                raise ValueError(
-                    f"backend='pallas' plans one (slice, chunk) per window: "
-                    f"window = cols_per_chunk * slice_height = {kernel_window}"
-                    f", but window={window} was requested (pass window=None "
-                    f"to derive it, or change cols_per_chunk)"
-                )
-            self.window = kernel_window
-        else:
-            self.window = DEFAULT_WINDOW if window is None else int(window)
+        self.window = resolve_window(
+            window,
+            backend_resolved=self.backend_resolved,
+            cols_per_chunk=self.cols_per_chunk,
+            slice_height=sell.slice_height,
+        )
         if plan_width_multiple is None:
             plan_width_multiple = (
                 self.cols_per_chunk if self.backend_resolved == "pallas" else 1
@@ -364,6 +491,10 @@ class SpMVEngine:
 
         # Planning is lazy: perf-model queries (`perf`) never pay for padding,
         # schedule construction, or compilation — only execution does.
+        # Reentrant because the ensure-chain nests (compile -> schedule ->
+        # plan -> padded), and a lock so concurrent matvec/matmat callers
+        # plan and compile exactly once.
+        self._plan_lock = threading.RLock()
         self._padded = None  # (values (n_slices, W, H), stream, W)
         self._ci3 = None  # colidx (n_slices, W, H) — kept for plan padding
         self._plan = None  # (ci_plan, va_plan, stream, W_real, W_plan)
@@ -375,13 +506,14 @@ class SpMVEngine:
     # -- planning ----------------------------------------------------------
 
     def _ensure_padded(self):
-        if self._padded is None:
-            from .spmv import _sell_padded  # local: spmv routes through engine
+        with self._plan_lock:
+            if self._padded is None:
+                from .spmv import _sell_padded  # local: spmv routes via engine
 
-            ci, va, W = _sell_padded(self.sell)
-            self._ci3 = ci
-            self._padded = (va, np.ascontiguousarray(ci.reshape(-1)), W)
-        return self._padded
+                ci, va, W = _sell_padded(self.sell)
+                self._ci3 = ci
+                self._padded = (va, np.ascontiguousarray(ci.reshape(-1)), W)
+            return self._padded
 
     def _ensure_plan(self):
         """Width-aware plan geometry: pad the SELL width up to
@@ -389,6 +521,10 @@ class SpMVEngine:
         SpMV) and lay out the index stream the executor will actually
         consume. Returns ``(ci_plan, va_plan, stream, W_real, W_plan)`` with
         the arrays shaped (n_slices, W_plan, H)."""
+        with self._plan_lock:
+            return self._ensure_plan_locked()
+
+    def _ensure_plan_locked(self):
         if self._plan is None:
             va, stream, W = self._ensure_padded()
             ci = self._ci3
@@ -416,16 +552,17 @@ class SpMVEngine:
     def schedule(self) -> BlockSchedule:
         """The coalescer plan (content-addressed cache; built on first use,
         loaded from the persistent store when one is configured)."""
-        if self._schedule is None:
-            _, _, stream, _, _ = self._ensure_plan()
-            self._schedule, self.plan_cached = cached_block_schedule(
-                stream,
-                window=self.window,
-                block_rows=self.block_rows,
-                cache_dir=self.cache_dir,
-                matrix_digest=_sell_content_digest(self.sell),
-            )
-        return self._schedule
+        with self._plan_lock:
+            if self._schedule is None:
+                _, _, stream, _, _ = self._ensure_plan()
+                self._schedule, self.plan_cached = cached_block_schedule(
+                    stream,
+                    window=self.window,
+                    block_rows=self.block_rows,
+                    cache_dir=self.cache_dir,
+                    matrix_digest=_sell_content_digest(self.sell),
+                )
+            return self._schedule
 
     def persist_schedule(self, cache_dir: Optional[str] = None) -> Optional[str]:
         """Write the already-built schedule to the persistent store (no-op if
@@ -434,27 +571,32 @@ class SpMVEngine:
         *after* a cache directory is set persist automatically; this covers
         the adopt-a-directory-later path (`get_engine(..., cache_dir=...)`
         hitting an engine that already planned without one)."""
-        cache_dir = schedule_store.resolve_cache_dir(
-            cache_dir if cache_dir is not None else self.cache_dir
-        )
-        if cache_dir is None or self._schedule is None:
-            return None
-        _, _, stream, _, _ = self._ensure_plan()
-        digest = stream_digest(stream)
-        matrix_digest = _sell_content_digest(self.sell)
-        path = schedule_store.schedule_path(
-            cache_dir, digest, window=self.window, block_rows=self.block_rows,
-            matrix_digest=matrix_digest,
-        )
-        if not os.path.exists(path):
-            schedule_store.save_schedule(
-                path, self._schedule, stream_digest=digest,
-                matrix_digest=matrix_digest,
+        with self._plan_lock:
+            cache_dir = schedule_store.resolve_cache_dir(
+                cache_dir if cache_dir is not None else self.cache_dir
             )
-            _plan_stats["disk_saves"] += 1
-        return path
+            if cache_dir is None or self._schedule is None:
+                return None
+            _, _, stream, _, _ = self._ensure_plan()
+            digest = stream_digest(stream)
+            matrix_digest = _sell_content_digest(self.sell)
+            path = schedule_store.schedule_path(
+                cache_dir, digest, window=self.window,
+                block_rows=self.block_rows, matrix_digest=matrix_digest,
+            )
+            if not os.path.exists(path):
+                schedule_store.save_schedule(
+                    path, self._schedule, stream_digest=digest,
+                    matrix_digest=matrix_digest,
+                )
+                _bump("disk_saves")
+            return path
 
     def _ensure_compiled(self):
+        with self._plan_lock:
+            return self._ensure_compiled_locked()
+
+    def _ensure_compiled_locked(self):
         if self._matvec is None:
             ci_plan, va_plan, stream, W, W_plan = self._ensure_plan()
             sched = self.schedule
@@ -579,9 +721,14 @@ def get_engine(
     """Engine cache: same matrix content + plan params -> same engine (and
     therefore same compiled matvec/matmat). CSR inputs are keyed on the SELL
     they convert to, so CSR and its converted SELL share an engine. The key
-    includes the *resolved* backend (and, for pallas, `cols_per_chunk`, which
-    shapes its plan); `cache_dir` is not part of the key — it changes where a
-    plan is stored, never what it is."""
+    includes the *resolved* backend and the *resolved* window — exactly the
+    resolution `SpMVEngine.__init__` performs, so ``window=None`` and its
+    explicit spelling (256 for reference, `cols_per_chunk * slice_height`
+    for pallas) share one engine instead of duplicating schedules and jit
+    compiles — and, for pallas, `cols_per_chunk`, which shapes its plan.
+    `cache_dir` is not part of the key — it changes where a plan is stored,
+    never what it is. Thread-safe: concurrent callers with the same key get
+    the same engine object."""
     if isinstance(matrix, CSRMatrix):
         matrix.validate()
         kw = {} if slice_height is None else {"slice_height": slice_height}
@@ -591,29 +738,40 @@ def get_engine(
     resolved = resolve_backend(backend)
     key = (
         _sell_content_digest(matrix),
-        window,
+        resolve_window(
+            window,
+            backend_resolved=resolved,
+            cols_per_chunk=cols_per_chunk,
+            slice_height=matrix.slice_height,
+        ),
         block_rows,
         resolved,
         cols_per_chunk if resolved == "pallas" else None,
     )
-    eng = _engine_cache.get(key)
-    if eng is None:
-        eng = SpMVEngine(
-            matrix,
-            window=window,
-            block_rows=block_rows,
-            backend=backend,
-            cols_per_chunk=cols_per_chunk,
-            cache_dir=cache_dir,
-        )
-        _engine_cache.put(key, eng)
-    elif cache_dir is not None:
-        # The cached engine may have been created without persistence (or
-        # with a different directory). An explicit request must not be
-        # silently dropped: adopt the directory and write through any plan
-        # that was already built.
-        eng.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
-        eng.persist_schedule()
+    adopted = None
+    with _engine_lock:
+        eng = _engine_cache.get(key)
+        if eng is None:
+            eng = SpMVEngine(
+                matrix,
+                window=window,
+                block_rows=block_rows,
+                backend=backend,
+                cols_per_chunk=cols_per_chunk,
+                cache_dir=cache_dir,
+            )
+            _engine_cache.put(key, eng)
+        elif cache_dir is not None:
+            # The cached engine may have been created without persistence (or
+            # with a different directory). An explicit request must not be
+            # silently dropped: adopt the directory and write through any plan
+            # that was already built.
+            eng.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+            adopted = eng
+    if adopted is not None:
+        # npz write outside the global lock: the engine's own _plan_lock
+        # guards it, so unrelated get_engine callers don't queue behind I/O.
+        adopted.persist_schedule()
     return eng
 
 

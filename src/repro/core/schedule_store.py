@@ -46,7 +46,11 @@ import numpy as np
 from .coalescer import BlockSchedule
 
 CACHE_DIR_ENV = "REPRO_SCHEDULE_CACHE"
-STORE_VERSION = 1
+# v2: partial-window tail padding no longer mints a spurious block-0 warp, so
+# v1 files can disagree with the fixed planner's warp counts (`n_warps`,
+# plan_report coalesce stats) — reject them and replan rather than serve
+# stale metadata.
+STORE_VERSION = 2
 
 _ARRAY_FIELDS = ("tags", "n_warps", "elem_warp", "elem_offset", "elem_valid")
 

@@ -8,7 +8,10 @@ on the production mesh.
 `python -m repro.launch.serve --spmv banded --batch 64 --requests 8` stands up
 an `SpMVEngine` for one matrix and serves batches of right-hand sides through
 the cached coalescer plan (`matmat`), reporting steady-state throughput — the
-thousands-of-RHS regime the schedule cache exists for."""
+thousands-of-RHS regime the schedule cache exists for. Add `--mesh data,model`
+to shard row slices over the mesh's data axis and RHS columns over model
+(`core.dist.ShardedSpMVEngine`), with per-shard coalesce stats and per-device
+throughput in the report."""
 from __future__ import annotations
 
 import argparse
@@ -62,47 +65,94 @@ _SPMV_MATRICES = {
 
 
 def serve_spmv(args) -> None:
-    """Batched SpMV serving: one engine, many right-hand-side batches."""
+    """Batched SpMV serving: one engine, many right-hand-side batches.
+
+    With ``--mesh`` the matrix is row-sharded over the mesh's ``data`` axis
+    and RHS columns over ``model`` (core.dist.ShardedSpMVEngine); the report
+    then includes per-shard coalesce stats and per-device throughput."""
     from repro.core.engine import get_engine, schedule_cache_stats
 
     gen = _SPMV_MATRICES[args.spmv](args.spmv_rows)
     csr = gen(np.random.default_rng(args.seed))
     t0 = time.time()
-    engine = get_engine(
-        csr,
-        window=args.window,
-        block_rows=args.block_rows,
-        backend=args.backend,
-        cache_dir=args.schedule_cache,
-    )
-    rep = engine.plan_report()  # forces the (lazy) schedule build
-    plan_s = time.time() - t0
-    print(
-        f"spmv-serve: {args.spmv} {rep['n_rows']}x{rep['n_cols']} "
-        f"nnz_padded={rep['nnz_padded']} planned in {plan_s:.3f}s "
-        f"(schedule_cached={rep['schedule_cached']})"
-    )
-    print(
-        f"  backend: {rep['backend']} -> {rep['backend_resolved']} "
-        f"(cols_per_chunk={rep['cols_per_chunk']}, "
-        f"plan_width={rep['plan_width']})"
-    )
-    print(
-        f"  plan: window={rep['window']} block_rows={rep['block_rows']} "
-        f"wide_accesses={rep['wide_accesses']} "
-        f"coalesce_rate={rep['coalesce_rate']:.2f}"
-    )
+    if args.mesh:
+        from repro.core.dist import ShardedSpMVEngine
+        from repro.launch.mesh import parse_mesh_spec
+
+        mesh = parse_mesh_spec(args.mesh)
+        engine = ShardedSpMVEngine(
+            csr,
+            mesh=mesh,
+            window=args.window,
+            block_rows=args.block_rows,
+            backend=args.backend,
+            cache_dir=args.schedule_cache,
+        )
+        rep = engine.plan_report()  # forces every shard's schedule build
+        plan_s = time.time() - t0
+        cached = [s["schedule_cached"] for s in rep["shards"]]
+        print(
+            f"spmv-serve: {args.spmv} {rep['n_rows']}x{rep['n_cols']} "
+            f"nnz_padded={rep['nnz_padded']} planned in {plan_s:.3f}s "
+            f"(schedules_cached={sum(bool(c) for c in cached)}"
+            f"/{len(cached)})"
+        )
+        print(
+            f"  mesh: data={rep['mesh']['data']} model={rep['mesh']['model']}"
+            f" ({rep['n_devices']} devices), {rep['n_shards']} row shards, "
+            f"backend {rep['backend']} -> {rep['backend_resolved']}"
+        )
+        print(
+            f"  plan: block_rows={rep['block_rows']} "
+            f"wide_accesses={rep['wide_accesses']} "
+            f"coalesce_rate={rep['coalesce_rate']:.2f}"
+        )
+        for s in rep["shards"]:
+            print(
+                f"    shard {s['shard']}: rows [{s['rows'][0]}, "
+                f"{s['rows'][1]}) window={s['window']} "
+                f"wide_accesses={s['wide_accesses']} "
+                f"coalesce_rate={s['coalesce_rate']:.2f} "
+                f"cached={s['schedule_cached']}"
+            )
+    else:
+        engine = get_engine(
+            csr,
+            window=args.window,
+            block_rows=args.block_rows,
+            backend=args.backend,
+            cache_dir=args.schedule_cache,
+        )
+        rep = engine.plan_report()  # forces the (lazy) schedule build
+        plan_s = time.time() - t0
+        print(
+            f"spmv-serve: {args.spmv} {rep['n_rows']}x{rep['n_cols']} "
+            f"nnz_padded={rep['nnz_padded']} planned in {plan_s:.3f}s "
+            f"(schedule_cached={rep['schedule_cached']})"
+        )
+        print(
+            f"  backend: {rep['backend']} -> {rep['backend_resolved']} "
+            f"(cols_per_chunk={rep['cols_per_chunk']}, "
+            f"plan_width={rep['plan_width']})"
+        )
+        print(
+            f"  plan: window={rep['window']} block_rows={rep['block_rows']} "
+            f"wide_accesses={rep['wide_accesses']} "
+            f"coalesce_rate={rep['coalesce_rate']:.2f}"
+        )
     rng = np.random.default_rng(args.seed + 1)
     X = jnp.asarray(
         rng.standard_normal((csr.n_cols, args.batch)).astype(np.float32)
     )
-    engine.matmat(X).block_until_ready()  # compile outside the timed loop
+    # compile outside the timed loop (block_until_ready is a no-op on the
+    # sharded engine's host-gathered results, which are already synchronized)
+    jax.block_until_ready(engine.matmat(X))
     t0 = time.time()
     for _ in range(args.requests):
         X = jnp.asarray(
             rng.standard_normal((csr.n_cols, args.batch)).astype(np.float32)
         )
-        engine.matmat(X).block_until_ready()
+        jax.block_until_ready(engine.matmat(X))
     dt = time.time() - t0
     spmvs = args.requests * args.batch
     gflops = 2.0 * csr.nnz * spmvs / max(dt, 1e-12) / 1e9
@@ -110,6 +160,25 @@ def serve_spmv(args) -> None:
         f"  served {args.requests} batches x {args.batch} RHS in {dt:.3f}s "
         f"({spmvs / dt:.1f} SpMV/s, {gflops:.3f} GFLOP/s equivalent)"
     )
+    if args.mesh:
+        # Per-device throughput: each mesh device owns one (row-shard,
+        # column-group) block of every batch; its share of the *real* FLOPs
+        # (the shard's row range of csr.nnz — the same basis as the
+        # aggregate GFLOP/s line above) over the wall time is its rate.
+        per_dev = {}
+        for blk in engine.placement(args.batch):
+            lo, hi = blk["rows"]
+            nnz_shard = int(csr.indptr[hi]) - int(csr.indptr[lo])
+            c0, c1 = blk["cols"]
+            flops = 2.0 * nnz_shard * (c1 - c0) * args.requests
+            dev = blk["device"]
+            per_dev[dev] = per_dev.get(dev, 0.0) + flops
+        print(f"  per-device throughput ({len(per_dev)} active devices):")
+        for dev in sorted(per_dev, key=lambda d: d.id):
+            print(
+                f"    {dev.platform.upper()}:{dev.id} "
+                f"{per_dev[dev] / max(dt, 1e-12) / 1e9:.3f} GFLOP/s"
+            )
     stats = schedule_cache_stats()
     print(f"  schedule cache: {stats}")
     if args.assert_warm_cache:
@@ -153,6 +222,13 @@ def main() -> None:
         "--backend", choices=("reference", "pallas", "auto"), default="auto",
         help="SpMV execution backend (pallas runs the fused sell_spmv "
         "kernel; interpret mode off-TPU)",
+    )
+    ap.add_argument(
+        "--mesh", default=None, metavar="SPEC",
+        help="shard --spmv serving over a device mesh: 'data,model' "
+        "auto-factors all visible devices, '4,2' pins explicit (data, "
+        "model) sizes; row slices shard over data, RHS columns over model "
+        "(core.dist.ShardedSpMVEngine)",
     )
     ap.add_argument(
         "--schedule-cache", default=None, metavar="DIR",

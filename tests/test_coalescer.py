@@ -167,19 +167,51 @@ def test_schedule_golden_vs_cshr_trace(window, block):
         for w, (trace_tags, slot_map) in enumerate(per_window):
             valid = tags[w][tags[w] != SENTINEL]
             # same wide accesses (CSHR issues each unique block once; the
-            # schedule stores them sorted). The final partial window is padded
-            # with index 0 (block 0), which may add one pad-only warp the
+            # schedule stores them sorted) — including on the final partial
+            # window, where tail padding must not mint a warp the
             # watchdog-flushed trace doesn't issue.
-            w_len = min(window, len(idx) - w * window)
             expected = np.unique(trace_tags)
-            if w_len < window:
-                expected = np.unique(np.concatenate([expected, [0]]))
             assert n_warps[w] == len(expected), (name, w)
             np.testing.assert_array_equal(valid, expected, name)
             # same per-element (block, offset) service coordinates
             for slot, (tag, off) in slot_map.items():
                 assert tags[w, elem_warp[w, slot]] == tag, (name, w, slot)
                 assert elem_offset[w, slot] == off, (name, w, slot)
+
+
+@pytest.mark.parametrize("window,block", [(16, 4), (32, 8), (64, 8)])
+def test_partial_window_warp_count_matches_cshr_trace(window, block):
+    """Regression pin (golden): on streams whose length is NOT a multiple of
+    the window, the schedule's total warp count must equal the number of wide
+    accesses the step-exact CSHR emulation issues. The old planner padded the
+    tail with index 0 and derived tags from all lanes, so a partial window
+    whose real indices never touch block 0 allocated a spurious block-0 warp
+    — one wasted wide fetch per stream."""
+    rng = np.random.default_rng(77)
+    streams = [
+        # offset well away from block 0 so a pad-minted block-0 warp is
+        # unambiguously spurious
+        ("offset-band", (rng.integers(0, 64, size=5 * window + 7) + 512)),
+        ("high-random", rng.integers(1024, 4096, size=window + 1)),
+        ("tiny-tail", np.asarray([2000, 2001, 2002])),
+    ]
+    for name, idx in streams:
+        assert len(idx) % window != 0  # the premise of the regression
+        trace = cshr_reference_trace(idx, window=window, block_rows=block)
+        sched = build_block_schedule(
+            jnp.asarray(np.asarray(idx, dtype=np.int32)),
+            window=window, block_rows=block,
+        )
+        n_warps = np.asarray(sched.n_warps)
+        assert int(n_warps.sum()) == len(trace.tags), (name, window, block)
+        # ...and the perf model's count (what plan_report surfaces) agrees
+        wide, _ = coalesce_stats(idx, window=window, block_rows=block)
+        assert int(n_warps.sum()) == wide, (name, window, block)
+        # block 0 never appears as a tag unless a real index maps to it
+        real_blocks = np.unique(np.asarray(idx, dtype=np.int64) // block)
+        tags = np.asarray(sched.tags)
+        if 0 not in real_blocks:
+            assert not (tags[tags != SENTINEL] == 0).any(), name
 
 
 @pytest.mark.parametrize("window,block", [(16, 4), (64, 8), (256, 8)])

@@ -1,0 +1,272 @@
+"""ShardedSpMVEngine: row-slice/RHS-column decomposition over a device mesh.
+
+Parity is the contract: the sharded engine must be *bit-identical* to the
+single-device engine on the reference backend (the decomposition keeps every
+shard's per-row reduction shape-identical) and within 1e-5 on pallas. The
+in-process tests run on whatever devices exist (a 1-device host degenerates
+to a (1, 1) mesh with shards round-robined onto it — the decomposition logic
+is still exercised); the `slow` subprocess test forces an 8-device CPU mesh
+(`XLA_FLAGS=--xla_force_host_platform_device_count=8`), which is also what
+the CI multi-device job uses for the whole module.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ShardedSpMVEngine,
+    SpMVEngine,
+    clear_engine_cache,
+    clear_schedule_cache,
+    column_groups,
+    csr_to_sell,
+    row_shard_sells,
+    schedule_cache_stats,
+)
+from repro.core.matrices import banded, powerlaw, random_uniform
+from repro.launch.mesh import parse_mesh_spec
+
+REPO = Path(__file__).resolve().parent.parent
+RNG = np.random.default_rng(31)
+
+MATRICES = [
+    ("banded", banded(300, 16, 0.7), 300),
+    ("powerlaw", powerlaw(257, 8), 257),
+    ("random", random_uniform(129, 6), 129),
+]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_engine_cache()
+    clear_schedule_cache()
+    yield
+
+
+def _sell(gen, n, slice_height=8):
+    return csr_to_sell(gen(np.random.default_rng(0)), slice_height=slice_height)
+
+
+@pytest.mark.parametrize("name,gen,n", MATRICES)
+def test_sharded_matmat_bit_identical_to_single_device(name, gen, n):
+    """Acceptance: reference-backend sharded matmat == single-device matmat,
+    bit for bit, across matrix families — including shard counts that do not
+    divide n_slices and the k=1 edge."""
+    sell = _sell(gen, n)
+    assert sell.n_slices % 4 != 0  # uneven split is the premise
+    X = jnp.asarray(
+        RNG.standard_normal((sell.n_cols, 5)).astype(np.float32)
+    )
+    single = SpMVEngine(sell, backend="reference")
+    sharded = ShardedSpMVEngine(sell, backend="reference", n_shards=4)
+    assert sharded.n_shards == 4
+    np.testing.assert_array_equal(
+        np.asarray(sharded.matmat(X)), np.asarray(single.matmat(X))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sharded.matvec(X[:, 0])), np.asarray(single.matvec(X[:, 0]))
+    )
+    k1 = X[:, :1]
+    Y1 = sharded.matmat(k1)
+    assert Y1.shape == (sell.n_rows, 1)
+    np.testing.assert_array_equal(
+        np.asarray(Y1), np.asarray(single.matmat(k1))
+    )
+
+
+def test_sharded_pallas_backend_matches_single_device():
+    """Pallas shards (interpret mode off-TPU) stay within the 1e-5 gate of
+    the single-device reference engine."""
+    sell = _sell(banded(64, 8, 0.6), 64)
+    x = jnp.asarray(RNG.standard_normal(sell.n_cols).astype(np.float32))
+    y_ref = np.asarray(SpMVEngine(sell, backend="reference").matvec(x))
+    sharded = ShardedSpMVEngine(
+        sell, backend="pallas", cols_per_chunk=4, n_shards=2
+    )
+    assert sharded.backend_resolved == "pallas"
+    y_sh = np.asarray(sharded.matvec(x))
+    assert np.abs(y_sh - y_ref).max() <= 1e-5
+
+
+def test_row_shard_sells_uniform_width_and_coverage():
+    sell = _sell(banded(300, 16, 0.7), 300)
+    shards = row_shard_sells(sell, 3)
+    assert [lo for _, lo, _ in shards] == [0, 96, 200]  # 38 slices -> 12/13/13
+    assert shards[-1][2] == sell.n_rows
+    W = int(sell.slice_widths.max())
+    total_rows = 0
+    for shard, lo, hi in shards:
+        assert (np.asarray(shard.slice_widths) == W).all()
+        assert shard.n_rows == hi - lo
+        total_rows += shard.n_rows
+    assert total_rows == sell.n_rows
+    # shards clamp to n_slices; a degenerate ask still covers the matrix
+    many = row_shard_sells(sell, sell.n_slices + 10)
+    assert len(many) == sell.n_slices
+
+
+def test_column_groups_balanced_and_k1_edge():
+    assert column_groups(8, 2) == [slice(0, 4), slice(4, 8)]
+    assert column_groups(5, 2) == [slice(0, 2), slice(2, 5)]
+    assert column_groups(1, 4) == [slice(0, 1)]  # k=1: one group, rest idle
+    assert column_groups(3, 8) == [slice(0, 1), slice(1, 2), slice(2, 3)]
+    assert sum(s.stop - s.start for s in column_groups(17, 3)) == 17
+
+
+def test_more_shards_than_mesh_rows_round_robins():
+    """Shard count beyond the data axis is allowed (round-robin placement),
+    so multi-shard decomposition is exercised even on a 1-device host."""
+    sell = _sell(powerlaw(257, 8), 257)
+    sharded = ShardedSpMVEngine(sell, backend="reference", n_shards=5)
+    x = jnp.asarray(RNG.standard_normal(sell.n_cols).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(sharded.matvec(x)),
+        np.asarray(SpMVEngine(sell, backend="reference").matvec(x)),
+    )
+    rows = {s["device_row"] for s in sharded.plan_report()["shards"]}
+    assert rows == set(range(min(5, sharded.n_data)))
+
+
+def test_plan_report_per_shard_coalesce_stats():
+    sell = _sell(banded(300, 16, 0.7), 300)
+    sharded = ShardedSpMVEngine(
+        sell, backend="reference", n_shards=3, window=64
+    )
+    rep = sharded.plan_report()
+    assert rep["n_shards"] == 3 and len(rep["shards"]) == 3
+    assert rep["mesh"]["data"] == sharded.n_data
+    assert rep["mesh"]["model"] == sharded.n_model
+    covered = []
+    for s in rep["shards"]:
+        assert s["wide_accesses"] > 0 and s["coalesce_rate"] > 0
+        assert s["window"] == 64
+        covered.append(s["rows"])
+    # row ranges tile the matrix exactly
+    assert covered[0][0] == 0 and covered[-1][1] == sell.n_rows
+    for (_, hi), (lo, _) in zip(covered, covered[1:]):
+        assert hi == lo
+    # aggregate wide accesses = sum of the per-shard streams' counts
+    assert rep["wide_accesses"] == sum(
+        s["wide_accesses"] for s in rep["shards"]
+    )
+    # one content-addressed schedule per shard was planned
+    assert schedule_cache_stats()["built"] == 3
+
+
+def test_per_shard_schedule_persistence_roundtrip(tmp_path):
+    """Each shard persists its own digest-named plan; a cold process (cleared
+    in-memory caches) reloads all of them and builds zero schedules."""
+    sell = _sell(random_uniform(129, 6), 129)
+    x = jnp.asarray(RNG.standard_normal(sell.n_cols).astype(np.float32))
+    cache_dir = str(tmp_path)
+    a = ShardedSpMVEngine(
+        sell, backend="reference", n_shards=3, cache_dir=cache_dir
+    )
+    y_a = np.asarray(a.matvec(x))
+    stats = schedule_cache_stats()
+    assert stats["built"] == 3 and stats["disk_saves"] == 3
+    assert len(list(tmp_path.iterdir())) == 3  # one npz per shard
+    clear_engine_cache()
+    clear_schedule_cache()
+    b = ShardedSpMVEngine(
+        sell, backend="reference", n_shards=3, cache_dir=cache_dir
+    )
+    y_b = np.asarray(b.matvec(x))
+    stats = schedule_cache_stats()
+    assert stats["built"] == 0 and stats["disk_hits"] == 3
+    np.testing.assert_array_equal(y_a, y_b)
+
+
+def test_mesh_validation_and_shape_checks():
+    sell = _sell(banded(64, 8, 0.6), 64)
+    bad_mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("a", "b")
+    )
+    with pytest.raises(ValueError, match="data"):
+        ShardedSpMVEngine(sell, mesh=bad_mesh)
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardedSpMVEngine(sell, n_shards=0)
+    eng = ShardedSpMVEngine(sell, backend="reference", n_shards=2)
+    with pytest.raises(ValueError, match="matvec"):
+        eng.matvec(jnp.zeros((sell.n_cols + 1,), jnp.float32))
+    with pytest.raises(ValueError, match="matmat"):
+        eng.matmat(jnp.zeros((sell.n_cols + 1, 2), jnp.float32))
+    # __call__ dispatches on rank, like the single-device engine
+    X = jnp.asarray(RNG.standard_normal((sell.n_cols, 2)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(eng(X)), np.asarray(eng.matmat(X)))
+
+
+def test_parse_mesh_spec():
+    mesh = parse_mesh_spec("data,model")
+    assert set(mesh.axis_names) == {"data", "model"}
+    n = len(jax.devices())
+    assert mesh.devices.size == n
+    one = parse_mesh_spec("1,1")
+    assert one.devices.shape == (1, 1)
+    with pytest.raises(ValueError, match="mesh"):
+        parse_mesh_spec("bogus,axes")
+    with pytest.raises(ValueError, match="devices"):
+        parse_mesh_spec(f"{n + 1},2")
+
+
+MULTIDEV_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import ShardedSpMVEngine, SpMVEngine, csr_to_sell
+    from repro.core.matrices import banded
+    from repro.launch.mesh import parse_mesh_spec
+
+    mesh = parse_mesh_spec("data,model")
+    sell = csr_to_sell(banded(300, 16, 0.7)(np.random.default_rng(0)),
+                       slice_height=8)
+    X = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((sell.n_cols, 5)).astype(np.float32))
+    single = SpMVEngine(sell, backend="reference")
+    sharded = ShardedSpMVEngine(sell, backend="reference", mesh=mesh)
+    bitwise = bool(np.array_equal(np.asarray(sharded.matmat(X)),
+                                  np.asarray(single.matmat(X))))
+    k1 = bool(np.array_equal(np.asarray(sharded.matmat(X[:, :1])),
+                             np.asarray(single.matmat(X[:, :1]))))
+    devices = sorted({str(b["device"]) for b in sharded.placement(5)})
+    print(json.dumps({
+        "n_dev": len(jax.devices()),
+        "mesh": [sharded.n_data, sharded.n_model],
+        "n_shards": sharded.n_shards,
+        "bitwise": bitwise,
+        "k1": k1,
+        "n_devices_used": len(devices),
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_parity_on_forced_8_device_mesh():
+    """Acceptance: on a real (4, 2) mesh over 8 forced host CPU devices, the
+    sharded engine places blocks on all 8 devices and stays bit-identical to
+    the single-device engine."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SNIPPET],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_dev"] == 8
+    assert res["mesh"] == [4, 2]
+    assert res["n_shards"] == 4
+    assert res["bitwise"] and res["k1"]
+    assert res["n_devices_used"] == 8

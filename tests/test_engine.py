@@ -1,5 +1,7 @@
 """SpMVEngine: plan-once/execute-many semantics, schedule-cache identity,
 and bit-exact agreement with the per-call reference paths."""
+import threading
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -141,6 +143,97 @@ def test_get_engine_reuses_engine_and_compiled_fns():
     # engine from the equivalent CSR content resolves to the same plan params
     e3 = get_engine(sell, window=32, block_rows=8)
     assert e3 is not e1
+
+
+def test_get_engine_window_spellings_share_one_engine():
+    """Regression: the engine cache must key on the *resolved* window, so
+    `window=None` and its explicit spelling land on the same engine (object
+    identity — no duplicate schedules, no duplicate jit compiles)."""
+    _, csr = _case(64, 64, seed=25)
+    sell = csr_to_sell(csr, slice_height=8)
+    # reference: None resolves to DEFAULT_WINDOW = 256
+    e_none = get_engine(sell, backend="reference")
+    e_256 = get_engine(sell, backend="reference", window=256)
+    assert e_256 is e_none
+    # pallas: None resolves to cols_per_chunk * slice_height
+    p_none = get_engine(sell, backend="pallas", cols_per_chunk=4)
+    p_expl = get_engine(sell, backend="pallas", cols_per_chunk=4, window=32)
+    assert p_expl is p_none
+    assert p_none is not e_none
+    stats = engine_cache_stats()
+    assert stats["size"] == 2 and stats["hits"] >= 2
+    # a window that fights the pallas geometry raises even when a matching
+    # engine is already cached (resolution happens before the lookup)
+    with pytest.raises(ValueError, match="window"):
+        get_engine(sell, backend="pallas", cols_per_chunk=4, window=256)
+
+
+def test_memory_hit_writes_through_to_disk_store(tmp_path):
+    """Regression: a plan built *before* a cache directory was configured
+    must reach the persistent store on a later in-memory hit that carries
+    one — direct `cached_block_schedule` callers would otherwise never
+    persist (the memory hit returned before the store was consulted)."""
+    idx = (np.arange(700, dtype=np.int32) * 3) % 509
+    s1, hit1 = cached_block_schedule(idx, window=64, block_rows=8)
+    assert not hit1
+    assert schedule_cache_stats()["disk_saves"] == 0
+    assert list(tmp_path.iterdir()) == []
+    s2, hit2 = cached_block_schedule(
+        idx, window=64, block_rows=8, cache_dir=str(tmp_path)
+    )
+    assert hit2 and s2 is s1
+    stats = schedule_cache_stats()
+    assert stats["disk_saves"] == 1
+    files = list(tmp_path.iterdir())
+    assert len(files) == 1 and files[0].name.startswith("sched-")
+    # the write-through is idempotent: the file exists now, no second save
+    cached_block_schedule(idx, window=64, block_rows=8,
+                          cache_dir=str(tmp_path))
+    assert schedule_cache_stats()["disk_saves"] == 1
+    # ...and a cold process (empty memory cache) loads it instead of planning
+    clear_schedule_cache()
+    s3, hit3 = cached_block_schedule(
+        idx, window=64, block_rows=8, cache_dir=str(tmp_path)
+    )
+    stats = schedule_cache_stats()
+    assert hit3 and stats["built"] == 0 and stats["disk_hits"] == 1
+    np.testing.assert_array_equal(np.asarray(s3.tags), np.asarray(s1.tags))
+
+
+def test_concurrent_get_engine_returns_one_engine():
+    """Thread-safety smoke: N threads racing `get_engine` + matvec on the
+    same matrix must observe a single engine object and produce identical
+    results (the engine/schedule caches and plan counters are shared
+    mutable state on the serving path)."""
+    _, csr = _case(64, 80, seed=29)
+    sell = csr_to_sell(csr)
+    x = jnp.asarray(RNG.standard_normal(csr.n_cols).astype(np.float32))
+    engines, results, errors = [], [], []
+    barrier = threading.Barrier(8)
+
+    def worker():
+        try:
+            barrier.wait(timeout=30)
+            eng = get_engine(sell, window=64, block_rows=8,
+                             backend="reference")
+            engines.append(eng)
+            results.append(np.asarray(eng.matvec(x)))
+        except Exception as e:  # pragma: no cover - surfaced by the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert len(engines) == 8
+    assert all(e is engines[0] for e in engines)
+    for r in results[1:]:
+        np.testing.assert_array_equal(r, results[0])
+    # one plan, one schedule — nothing was raced into duplicate existence
+    assert schedule_cache_stats()["built"] == 1
+    assert engine_cache_stats()["size"] == 1
 
 
 def test_plan_report_contents():
