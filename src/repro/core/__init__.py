@@ -33,8 +33,16 @@ from .engine import (  # noqa: F401
 )
 from .dist import (  # noqa: F401
     ShardedSpMVEngine,
-    column_groups,
     row_shard_sells,
+)
+from .runtime import (  # noqa: F401
+    Executor,
+    StreamHandle,
+    StreamingExecutor,
+    column_groups,
+    microbatch_slices,
+    normalize_to_sell,
+    parse_stream_spec,
 )
 from .schedule_store import (  # noqa: F401
     CACHE_DIR_ENV,
@@ -50,5 +58,6 @@ from .perfmodel import (  # noqa: F401
     adapter_area_model,
     indirect_stream_perf,
     spmv_perf,
+    streaming_spmv_perf,
 )
 from .spmv import spmv_csr, spmv_sell, spmv_sell_coalesced  # noqa: F401

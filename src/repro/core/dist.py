@@ -34,9 +34,18 @@ code path runs on a laptop CPU, a forced multi-device CPU
 use), and a TPU slice. More shards than mesh rows is allowed (shards
 round-robin over the ``data`` axis), so shard-decomposition logic is
 exercised even on a single device.
+
+Execution entry point: `core/runtime.py`. Like `SpMVEngine`, this engine
+implements the `runtime.Executor` protocol — ``stage`` places every
+(row-shard, column-group) RHS block on its mesh device, ``dispatch``
+launches all block matmats asynchronously, ``finalize`` gathers — and
+``matmat`` *is* that three-step path run back to back. Wrap it in
+`runtime.StreamingExecutor` to overlap the staging of the next RHS
+micro-batch with compute on the previous one across the whole mesh.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple, Union
 
 import jax
@@ -45,7 +54,10 @@ import numpy as np
 
 from .coalescer import coalesce_stats
 from .engine import DEFAULT_COLS_PER_CHUNK, get_engine, resolve_backend
-from .formats import CSRMatrix, SELLMatrix, csr_to_sell
+from .formats import CSRMatrix, SELLMatrix
+from .perfmodel import streaming_spmv_perf
+from .runtime import column_groups, data_model_grid, device_put_rhs, \
+    normalize_to_sell, proper_slice
 
 
 def _default_mesh() -> jax.sharding.Mesh:
@@ -93,17 +105,27 @@ def row_shard_sells(
     return shards
 
 
-def column_groups(k: int, n_groups: int) -> List[slice]:
-    """Balanced contiguous split of `k` RHS columns into at most `n_groups`
-    non-empty slices (fewer when k < n_groups — the k=1 edge keeps one
-    group and leaves the rest of the model axis idle)."""
-    n_groups = max(1, min(n_groups, k)) if k else 1
-    bounds = np.linspace(0, k, n_groups + 1).astype(int)
-    return [
-        slice(int(bounds[j]), int(bounds[j + 1]))
-        for j in range(n_groups)
-        if bounds[j + 1] > bounds[j]
-    ]
+@dataclasses.dataclass
+class _StagedRHS:
+    """A RHS micro-batch placed on the mesh: one device array per
+    (device-row, column-group), shared by every shard round-robined onto
+    that row (the `stage` half of the Executor protocol)."""
+
+    k: int
+    groups: List[slice]
+    placed: Dict[Tuple[int, int], jnp.ndarray]
+    dtype: object
+
+
+@dataclasses.dataclass
+class _PendingBlocks:
+    """Dispatched-but-ungathered block results (the `dispatch` half).
+    Carries k/dtype so `finalize` assembles the k=0 edge exactly like
+    `matmat` does — the Executor identity holds for every input."""
+
+    blocks: List[List[jnp.ndarray]]
+    k: int
+    dtype: object
 
 
 class ShardedSpMVEngine:
@@ -137,36 +159,13 @@ class ShardedSpMVEngine:
         cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
         cache_dir: Optional[str] = None,
     ):
-        if isinstance(matrix, CSRMatrix):
-            matrix.validate()
-            kw = {} if slice_height is None else {"slice_height": slice_height}
-            sell = csr_to_sell(matrix, width_multiple=width_multiple, **kw)
-        elif isinstance(matrix, SELLMatrix):
-            sell = matrix
-            sell.validate()
-        else:
-            raise TypeError(
-                f"expected CSRMatrix or SELLMatrix, got {type(matrix)}"
-            )
+        sell = normalize_to_sell(
+            matrix, slice_height=slice_height, width_multiple=width_multiple
+        )
         self.sell = sell
         self.mesh = mesh if mesh is not None else _default_mesh()
-        names = self.mesh.axis_names
-        if "data" not in names or "model" not in names:
-            raise ValueError(
-                f"mesh must carry 'data' and 'model' axes, got {names!r}"
-            )
         # Device grid as (data, model), whatever the mesh's axis order.
-        order = [names.index("data"), names.index("model")]
-        extra = [i for i in range(len(names)) if i not in order]
-        for i in extra:
-            if self.mesh.devices.shape[i] != 1:
-                raise ValueError(
-                    f"mesh axis {names[i]!r} has size "
-                    f"{self.mesh.devices.shape[i]}; only 'data' and 'model' "
-                    f"may be > 1 for the sharded SpMV engine"
-                )
-        grid = np.transpose(self.mesh.devices, order + extra)
-        self.devices = grid.reshape(grid.shape[0], grid.shape[1])
+        self.devices = data_model_grid(self.mesh)
         self.n_data, self.n_model = self.devices.shape
 
         self.backend = backend
@@ -217,6 +216,14 @@ class ShardedSpMVEngine:
 
     # -- execution ---------------------------------------------------------
 
+    @property
+    def n_rows(self) -> int:
+        return self.sell.n_rows
+
+    @property
+    def n_cols(self) -> int:
+        return self.sell.n_cols
+
     def matvec(self, x: jnp.ndarray) -> np.ndarray:
         """y = A @ x: replicate x across the data axis, each shard computes
         its row block on its own device, concatenate. Returns the gathered
@@ -245,42 +252,70 @@ class ShardedSpMVEngine:
         dispatched before any result is gathered, so all mesh devices run
         concurrently. Bit-identical per column to the single-device engine
         on the reference backend. Returns the gathered result as a host
-        array (see `matvec`)."""
-        X = jnp.asarray(X)
+        array (see `matvec`). This is exactly the Executor pipeline run
+        back to back: ``finalize(dispatch(stage(X)))``."""
+        if not isinstance(X, (np.ndarray, jax.Array)):
+            X = jnp.asarray(X)
         if X.ndim != 2 or X.shape[0] != self.sell.n_cols:
             raise ValueError(
                 f"matmat expects X of shape ({self.sell.n_cols}, k), got "
                 f"{X.shape}"
             )
-        k = int(X.shape[1])
-        if k == 0:
-            return np.zeros((self.sell.n_rows, 0), X.dtype)
-        groups = column_groups(k, self.n_model)
-        # One transfer per (device row, column group): shards that round-robin
-        # onto the same mesh row share the placed RHS block instead of
-        # re-sending identical host->device traffic per shard.
-        placed: Dict[Tuple[int, int], jnp.ndarray] = {}
-        blocks: List[List[jnp.ndarray]] = []
-        for i, eng in enumerate(self.engines):
-            d = self._shard_device_row(i)
-            row_blocks = []
-            for j, cols in enumerate(groups):
-                if (d, j) not in placed:
-                    placed[(d, j)] = jax.device_put(
-                        X[:, cols], self.devices[d, j]
-                    )
-                row_blocks.append(eng.matmat(placed[(d, j)]))
-            blocks.append(row_blocks)
-        # All blocks are in flight; now gather (device->host copies sync).
-        rows = [
-            np.concatenate([np.asarray(b) for b in row], axis=1)
-            if len(row) > 1 else np.asarray(row[0])
-            for row in blocks
-        ]
-        return np.concatenate(rows, axis=0)
+        return self.finalize(self.dispatch(self.stage(X)))
 
     def __call__(self, x: jnp.ndarray) -> np.ndarray:
         return self.matvec(x) if jnp.asarray(x).ndim == 1 else self.matmat(x)
+
+    # -- streaming pipeline hooks (core.runtime.Executor protocol) ---------
+
+    def stage(self, X: jnp.ndarray, *, donate: bool = False) -> _StagedRHS:
+        """Place one RHS micro-batch on the mesh: one async `jax.device_put`
+        per (device row, column group) — shards that round-robin onto the
+        same mesh row share the placed block instead of re-sending identical
+        host->device traffic per shard. Donation retires jax-array column
+        blocks once transferred (see `runtime.device_put_rhs`)."""
+        if X.ndim != 2 or X.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"stage expects X of shape ({self.sell.n_cols}, k), got "
+                f"{X.shape}"
+            )
+        k = int(X.shape[1])
+        groups = column_groups(k, self.n_model)
+        rows_used = {
+            self._shard_device_row(i) for i in range(self.n_shards)
+        }
+        placed: Dict[Tuple[int, int], jnp.ndarray] = {}
+        for d in sorted(rows_used):
+            for j, cols in enumerate(groups):
+                placed[(d, j)] = device_put_rhs(
+                    X[:, cols], self.devices[d, j],
+                    donate=donate and proper_slice(cols, k),
+                )
+        return _StagedRHS(k=k, groups=groups, placed=placed, dtype=X.dtype)
+
+    def dispatch(self, staged: _StagedRHS) -> _PendingBlocks:
+        """Launch every (row-shard, column-group) block matmat on its staged
+        RHS — all async (JAX dispatch), no host synchronization."""
+        blocks: List[List[jnp.ndarray]] = []
+        for i, eng in enumerate(self.engines):
+            d = self._shard_device_row(i)
+            blocks.append([
+                eng.matmat(staged.placed[(d, j)])
+                for j in range(len(staged.groups))
+            ])
+        return _PendingBlocks(blocks=blocks, k=staged.k, dtype=staged.dtype)
+
+    def finalize(self, pending: _PendingBlocks) -> np.ndarray:
+        """Gather all in-flight blocks (device->host copies synchronize) and
+        assemble the (n_rows, k) result."""
+        if pending.k == 0:  # no groups were dispatched; nothing to gather
+            return np.zeros((self.sell.n_rows, 0), pending.dtype)
+        rows = [
+            np.concatenate([np.asarray(b) for b in row], axis=1)
+            if len(row) > 1 else np.asarray(row[0])
+            for row in pending.blocks
+        ]
+        return np.concatenate(rows, axis=0)
 
     # -- introspection / persistence ---------------------------------------
 
@@ -290,25 +325,30 @@ class ShardedSpMVEngine:
         paths = [eng.persist_schedule(cache_dir) for eng in self.engines]
         return [p for p in paths if p is not None]
 
-    def plan_report(self) -> Dict[str, object]:
+    def plan_report(
+        self, *, stream: Optional[Dict[str, int]] = None
+    ) -> Dict[str, object]:
         """Aggregate plan report plus per-shard coalesce stats.
 
         Forces planning on every shard. ``shards[i]`` reports the rows the
         shard owns, its stream's wide-access count and coalesce rate, its
         schedule geometry, and whether its plan came out of the cache —
         the per-memory-bank view of the paper's Sec. II-B statistics.
+        ``stream={"k": ..., "microbatch": ..., "depth": ...}`` adds the perf
+        model's streamed-throughput prediction for the whole matrix under
+        ``streaming`` (see `SpMVEngine.plan_report`).
         """
         shard_reports: List[Dict[str, object]] = []
         total_wide = 0
         total_elems = 0
         for i, eng in enumerate(self.engines):
             sched = eng.schedule  # force the plan
-            _, _, stream, _, _ = eng._ensure_plan()
+            _, _, shard_stream, _, _ = eng._ensure_plan()
             wide, rate = coalesce_stats(
-                stream, window=eng.window, block_rows=eng.block_rows
+                shard_stream, window=eng.window, block_rows=eng.block_rows
             )
             total_wide += wide
-            total_elems += int(stream.size)
+            total_elems += int(shard_stream.size)
             lo, hi = self.row_ranges[i]
             shard_reports.append({
                 "shard": i,
@@ -323,6 +363,17 @@ class ShardedSpMVEngine:
                 "schedule_cached": eng.plan_cached,
                 "device_row": self._shard_device_row(i),
             })
+        streaming = None
+        if stream is not None:
+            streaming = {
+                **{k: int(v) for k, v in stream.items()},
+                "perf": {
+                    system: dataclasses.asdict(
+                        streaming_spmv_perf(self.sell, system, **stream)
+                    )
+                    for system in ("base", "pack256")
+                },
+            }
         return {
             "n_rows": self.sell.n_rows,
             "n_cols": self.sell.n_cols,
@@ -339,4 +390,5 @@ class ShardedSpMVEngine:
                 if total_wide else 0.0
             ),
             "shards": shard_reports,
+            **({"streaming": streaming} if streaming is not None else {}),
         }

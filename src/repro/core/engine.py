@@ -41,6 +41,14 @@ module makes the plan a first-class, cached object:
 
 Cache sizes are bounded (LRU) — schedules for big matrices hold O(nnz)
 metadata and serving processes are long-lived.
+
+Execution entry point: `core/runtime.py`. `SpMVEngine` implements the
+`runtime.Executor` protocol (``stage``/``dispatch``/``finalize`` alongside
+the synchronous ``matvec``/``matmat``), so serving loops pipeline it through
+`runtime.StreamingExecutor` — host->device RHS staging overlapped with
+compute on the previous micro-batch — instead of calling `matmat` in
+lockstep. The CSR->SELL normalization and plan width padding live in
+`runtime` too (shared with `core.dist`).
 """
 from __future__ import annotations
 
@@ -58,21 +66,35 @@ import numpy as np
 from . import schedule_store
 from .coalescer import BlockSchedule, build_block_schedule, coalesce_stats, \
     schedule_gather_reference, trim_schedule_warps
-from .formats import CSRMatrix, SELLMatrix, csr_to_sell
-from .perfmodel import DEFAULT_HW, HWConfig, spmv_perf
+from .formats import CSRMatrix, SELLMatrix
+from .perfmodel import DEFAULT_HW, HWConfig, spmv_perf, streaming_spmv_perf
+from .runtime import device_put_rhs, normalize_to_sell, pad_width
 
 BACKENDS = ("reference", "pallas", "auto")
+BACKEND_ENV = "REPRO_BACKEND"
 DEFAULT_WINDOW = 256
 DEFAULT_COLS_PER_CHUNK = 8
 
 
 def resolve_backend(backend: str) -> str:
-    """Map "auto" to a concrete executor: pallas on TPU (native compile),
-    the jnp reference elsewhere — interpret-mode pallas is for correctness
-    checks, not serving. "reference"/"pallas" pass through."""
+    """Map "auto" to a concrete executor: the ``REPRO_BACKEND`` env var when
+    set (empty string = unset, mirroring ``REPRO_PALLAS_INTERPRET`` — one
+    variable flips every auto call site in a serve/benchmark process instead
+    of threading --backend through each CLI), otherwise pallas on TPU
+    (native compile) and the jnp reference elsewhere — interpret-mode pallas
+    is for correctness checks, not serving. Explicit "reference"/"pallas"
+    arguments always win over the environment."""
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if backend == "auto":
+        env = (os.environ.get(BACKEND_ENV) or "").strip()
+        if env and env != "auto":
+            if env not in BACKENDS:
+                raise ValueError(
+                    f"${BACKEND_ENV} must be one of {BACKENDS} (or empty = "
+                    f"unset), got {env!r}"
+                )
+            return env
         return "pallas" if jax.default_backend() == "tpu" else "reference"
     return backend
 
@@ -391,27 +413,6 @@ def _sell_content_digest(sell: SELLMatrix) -> str:
     return digest
 
 
-def _check_sell_plan_params(
-    sell: SELLMatrix, slice_height: Optional[int], width_multiple: int
-) -> None:
-    """slice_height/width_multiple steer CSR->SELL conversion; for an
-    already-built SELL they can only be honored if the matrix already
-    satisfies them — silently ignoring a mismatch would hand back a plan
-    with different geometry than the caller asked for."""
-    if slice_height is not None and slice_height != sell.slice_height:
-        raise ValueError(
-            f"matrix is already SELL with slice_height={sell.slice_height}; "
-            f"cannot re-slice to {slice_height} (convert from CSR instead)"
-        )
-    if width_multiple != 1 and np.any(
-        np.asarray(sell.slice_widths) % width_multiple
-    ):
-        raise ValueError(
-            f"matrix is already SELL and its slice widths are not multiples "
-            f"of {width_multiple} (convert from CSR instead)"
-        )
-
-
 class SpMVEngine:
     """Plan-once / execute-many SpMV over the coalesced data path.
 
@@ -458,16 +459,9 @@ class SpMVEngine:
         plan_width_multiple: Optional[int] = None,
         cache_dir: Optional[str] = None,
     ):
-        if isinstance(matrix, CSRMatrix):
-            matrix.validate()
-            kw = {} if slice_height is None else {"slice_height": slice_height}
-            sell = csr_to_sell(matrix, width_multiple=width_multiple, **kw)
-        elif isinstance(matrix, SELLMatrix):
-            _check_sell_plan_params(matrix, slice_height, width_multiple)
-            sell = matrix
-            sell.validate()
-        else:
-            raise TypeError(f"expected CSRMatrix or SELLMatrix, got {type(matrix)}")
+        sell = normalize_to_sell(
+            matrix, slice_height=slice_height, width_multiple=width_multiple
+        )
         self.sell = sell
         self.backend = backend  # as requested ("auto" preserved for report)
         self.backend_resolved = resolve_backend(backend)
@@ -527,18 +521,11 @@ class SpMVEngine:
     def _ensure_plan_locked(self):
         if self._plan is None:
             va, stream, W = self._ensure_padded()
-            ci = self._ci3
-            wm = self.plan_width_multiple
-            W_plan = max(-(-W // wm) * wm, wm)
+            ci_plan, va_plan, W_plan = pad_width(
+                self._ci3, va, multiple=self.plan_width_multiple
+            )
             if W_plan != W:
-                ns, H = self.sell.n_slices, self.sell.slice_height
-                ci_plan = np.zeros((ns, W_plan, H), dtype=np.int32)
-                va_plan = np.zeros((ns, W_plan, H), dtype=va.dtype)
-                ci_plan[:, :W] = ci
-                va_plan[:, :W] = va
                 stream = np.ascontiguousarray(ci_plan.reshape(-1))
-            else:
-                ci_plan, va_plan = ci, va
             self._plan = (ci_plan, va_plan, stream, W, W_plan)
             # The base padded arrays are now redundant (the plan holds what
             # execution needs); drop them so a padded pallas engine doesn't
@@ -643,6 +630,14 @@ class SpMVEngine:
 
     # -- execution ---------------------------------------------------------
 
+    @property
+    def n_rows(self) -> int:
+        return self.sell.n_rows
+
+    @property
+    def n_cols(self) -> int:
+        return self.sell.n_cols
+
     def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
         """y = A @ x through the cached coalesced plan. x: (n_cols,)."""
         x = jnp.asarray(x)
@@ -667,6 +662,32 @@ class SpMVEngine:
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.matvec(x) if jnp.asarray(x).ndim == 1 else self.matmat(x)
 
+    # -- streaming pipeline hooks (core.runtime.Executor protocol) ---------
+    # matmat(X) == finalize(dispatch(stage(X))) bit for bit; stage moves
+    # data, dispatch launches compute, finalize is the only host sync.
+
+    def stage(self, X: jnp.ndarray, *, donate: bool = False) -> jnp.ndarray:
+        """Place a RHS micro-batch on this engine's device (async transfer;
+        the compiled executables run on the default device, so that is the
+        staging target). Donation retires jax-array sources — see
+        `runtime.device_put_rhs` for when that is legal."""
+        if X.ndim != 2 or X.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"stage expects X of shape ({self.sell.n_cols}, k), got "
+                f"{X.shape}"
+            )
+        return device_put_rhs(X, donate=donate)
+
+    def dispatch(self, staged: jnp.ndarray) -> jnp.ndarray:
+        """Launch the batched matmat on an already-staged micro-batch —
+        async (JAX dispatch), no host synchronization."""
+        _, mm = self._ensure_compiled()
+        return mm(staged)
+
+    def finalize(self, pending: jnp.ndarray) -> jnp.ndarray:
+        """Block until a dispatched micro-batch's result is materialized."""
+        return jax.block_until_ready(pending)
+
     # -- introspection -----------------------------------------------------
 
     def perf(self, system: str, hw: HWConfig = DEFAULT_HW):
@@ -674,13 +695,23 @@ class SpMVEngine:
         ('base' | 'pack0' | 'pack64' | 'pack256')."""
         return spmv_perf(self.sell, system, hw)
 
-    def plan_report(self, hw: HWConfig = DEFAULT_HW) -> Dict[str, object]:
+    def plan_report(
+        self,
+        hw: HWConfig = DEFAULT_HW,
+        *,
+        stream: Optional[Dict[str, int]] = None,
+    ) -> Dict[str, object]:
         """The plan, inspectable: stream/coalescer stats + model predictions.
-        Forces planning (this reports on the actual plan, not an estimate)."""
+        Forces planning (this reports on the actual plan, not an estimate).
+        ``stream={"k": ..., "microbatch": ..., "depth": ...}`` adds the perf
+        model's streamed-throughput prediction (transfer/compute overlap —
+        `perfmodel.streaming_spmv_perf`) under ``streaming``; wrapping the
+        engine in `runtime.StreamingExecutor` and calling its `plan_report`
+        fills these in from the live pipeline shape."""
         sched = self.schedule
-        _, _, stream, W, W_plan = self._ensure_plan()
+        _, _, plan_stream, W, W_plan = self._ensure_plan()
         wide, rate = coalesce_stats(
-            stream, window=self.window, block_rows=self.block_rows
+            plan_stream, window=self.window, block_rows=self.block_rows
         )
         report: Dict[str, object] = {
             "n_rows": self.sell.n_rows,
@@ -704,6 +735,16 @@ class SpMVEngine:
                 for system in ("base", "pack0", "pack256")
             },
         }
+        if stream is not None:
+            report["streaming"] = {
+                **{k: int(v) for k, v in stream.items()},
+                "perf": {
+                    system: dataclasses.asdict(
+                        streaming_spmv_perf(self.sell, system, hw=hw, **stream)
+                    )
+                    for system in ("base", "pack256")
+                },
+            }
         return report
 
 
@@ -729,12 +770,10 @@ def get_engine(
     `cache_dir` is not part of the key — it changes where a plan is stored,
     never what it is. Thread-safe: concurrent callers with the same key get
     the same engine object."""
-    if isinstance(matrix, CSRMatrix):
-        matrix.validate()
-        kw = {} if slice_height is None else {"slice_height": slice_height}
-        matrix = csr_to_sell(matrix, width_multiple=width_multiple, **kw)
-    else:
-        _check_sell_plan_params(matrix, slice_height, width_multiple)
+    matrix = normalize_to_sell(
+        matrix, slice_height=slice_height, width_multiple=width_multiple,
+        validate=False,  # O(nnz) scan deferred to construction on a miss
+    )
     resolved = resolve_backend(backend)
     key = (
         _sell_content_digest(matrix),

@@ -344,6 +344,107 @@ def spmv_perf(
 
 
 # ---------------------------------------------------------------------------
+# Streamed execution (host->device RHS transfer overlapped with compute)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamingPerf:
+    """Predicted sync-vs-streamed cost of serving `k` right-hand sides
+    through `runtime.StreamingExecutor` with this pipeline shape."""
+
+    system: str
+    k: int
+    microbatch: int
+    depth: int
+    n_microbatches: int
+    transfer_cycles_per_microbatch: float
+    compute_cycles_per_microbatch: float
+    sync_cycles: float
+    streamed_cycles: float
+    speedup: float  # sync / streamed (>= 1; == 1 at depth 1)
+    # Fraction of the overlappable side's cycles hidden behind the other —
+    # the smaller of (transfer, compute) per micro-batch is what can hide:
+    # transfer hides behind compute when compute-bound, compute behind
+    # transfer when transfer-bound. (n_mb - 1) / n_mb at full overlap.
+    overlap_efficiency: float
+    sync_spmv_per_s: float
+    streamed_spmv_per_s: float
+    bottleneck: str  # 'compute' | 'transfer'
+
+
+def streaming_spmv_perf(
+    sell: SELLMatrix,
+    system: str,
+    *,
+    k: int,
+    microbatch: int,
+    depth: int = 2,
+    hw: HWConfig = DEFAULT_HW,
+) -> StreamingPerf:
+    """Overlap term for the streaming executor: the same decoupling argument
+    as the paper's coalescer (Sec. II — keep the memory stream and the
+    processing elements busy simultaneously), applied to the serving
+    front-end's host->device RHS traffic.
+
+    Per micro-batch of B columns the pipeline moves ``n_cols * B`` vector
+    elements over the channel (transfer) and runs B SpMVs (compute, the
+    per-system `spmv_perf` cycle count). Synchronous serving pays
+    ``transfer + compute`` per micro-batch; the streamed pipeline is the
+    standard two-stage bound — first transfer exposed, last compute
+    exposed, ``max(transfer, compute)`` per step in between::
+
+        streamed = T + (n_mb - 1) * max(T, C) + C
+
+    so with ``depth >= 2`` the steady state is bound by whichever side is
+    slower (the reported ``bottleneck``) and streamed <= sync always, with
+    equality at n_mb == 1. ``depth == 1`` cannot double-buffer and
+    degenerates to the synchronous schedule; depths beyond 2 buy queue
+    slack against jitter, not model-level cycles, so the model treats them
+    like 2 (deeper queues only bound memory).
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if microbatch < 1:
+        raise ValueError(f"microbatch must be >= 1, got {microbatch}")
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    B = min(int(microbatch), int(k))
+    n_mb = -(-int(k) // B)
+    base = spmv_perf(sell, system, hw)
+    transfer = sell.n_cols * B * hw.elem_bytes / hw.channel_bytes_per_cycle
+    compute = base.cycles * B
+    sync_cycles = n_mb * (transfer + compute)
+    if depth >= 2:
+        streamed_cycles = (
+            transfer + (n_mb - 1) * max(transfer, compute) + compute
+        )
+    else:
+        streamed_cycles = sync_cycles
+    hidden = sync_cycles - streamed_cycles  # == (n_mb - 1) * min(T, C)
+    overlappable = n_mb * min(transfer, compute)
+    seconds = 1.0 / (hw.freq_ghz * 1e9)
+    return StreamingPerf(
+        system=system,
+        k=int(k),
+        microbatch=B,
+        depth=int(depth),
+        n_microbatches=n_mb,
+        transfer_cycles_per_microbatch=float(transfer),
+        compute_cycles_per_microbatch=float(compute),
+        sync_cycles=float(sync_cycles),
+        streamed_cycles=float(streamed_cycles),
+        speedup=float(sync_cycles / streamed_cycles),
+        overlap_efficiency=(
+            float(hidden / overlappable) if overlappable else 0.0
+        ),
+        sync_spmv_per_s=float(k / (sync_cycles * seconds)),
+        streamed_spmv_per_s=float(k / (streamed_cycles * seconds)),
+        bottleneck="transfer" if transfer > compute else "compute",
+    )
+
+
+# ---------------------------------------------------------------------------
 # Area / on-chip efficiency (Fig. 6) — analytical model calibrated to the
 # paper's reported implementation points (GF 12 nm, 1 GHz, worst case).
 # ---------------------------------------------------------------------------

@@ -33,6 +33,12 @@ def auto_spmv_mesh() -> jax.sharding.Mesh:
     return make_host_mesh(model_axis=2 if n > 1 and n % 2 == 0 else 1)
 
 
+# The (data, model) grid normalization lives in core.runtime (core must not
+# depend on launch); re-exported here so CLI-side mesh consumers find every
+# mesh helper in one module.
+from repro.core.runtime import data_model_grid  # noqa: E402,F401
+
+
 def parse_mesh_spec(spec: str) -> jax.sharding.Mesh:
     """Mesh from a CLI spec for the sharded SpMV path.
 

@@ -159,6 +159,29 @@ def test_auto_backend_resolves_off_tpu():
     assert eng.backend_resolved == resolve_backend("auto")
 
 
+def test_repro_backend_env_var_steers_auto(monkeypatch):
+    """$REPRO_BACKEND overrides the platform rule for backend="auto" only:
+    explicit backends win, empty string means unset (mirroring
+    REPRO_PALLAS_INTERPRET), garbage is rejected."""
+    platform_default = resolve_backend("auto")
+    monkeypatch.setenv("REPRO_BACKEND", "pallas")
+    assert resolve_backend("auto") == "pallas"
+    assert resolve_backend("reference") == "reference"  # explicit wins
+    _, sell = _sell_case(32, 32, 0.2, 8, seed=7)
+    eng = SpMVEngine(sell, backend="auto", cols_per_chunk=4)
+    assert eng.backend_resolved == "pallas"
+    monkeypatch.setenv("REPRO_BACKEND", "reference")
+    assert resolve_backend("auto") == "reference"
+    assert resolve_backend("pallas") == "pallas"
+    monkeypatch.setenv("REPRO_BACKEND", "")
+    assert resolve_backend("auto") == platform_default  # empty = unset
+    monkeypatch.setenv("REPRO_BACKEND", "auto")
+    assert resolve_backend("auto") == platform_default
+    monkeypatch.setenv("REPRO_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="REPRO_BACKEND"):
+        resolve_backend("auto")
+
+
 def test_invalid_backend_and_window_mismatch_raise():
     _, sell = _sell_case(32, 32, 0.2, 8, seed=7)
     with pytest.raises(ValueError, match="backend"):

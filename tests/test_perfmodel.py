@@ -9,6 +9,7 @@ from repro.core.perfmodel import (
     adapter_area_model,
     indirect_stream_perf,
     spmv_perf,
+    streaming_spmv_perf,
 )
 
 RNG = np.random.default_rng(0)
@@ -60,6 +61,79 @@ def test_spmv_system_ordering_locality_matrix():
 def test_base_utilization_low():
     r = spmv_perf(BANDED, "base")
     assert r.mem_utilization < 0.15  # paper: 5.9 % average
+
+
+def test_streaming_overlap_term_invariants():
+    """The streamed schedule can only hide transfer, never add cycles:
+    streamed <= sync always, depth=1 degenerates to the synchronous
+    schedule, and steady state is bound by max(transfer, compute)."""
+    for sell in (BANDED, RANDOM):
+        for system in ("base", "pack256"):
+            p = streaming_spmv_perf(
+                sell, system, k=64, microbatch=16, depth=2
+            )
+            assert p.streamed_cycles <= p.sync_cycles
+            assert p.speedup >= 1.0
+            assert 0.0 <= p.overlap_efficiency <= 1.0
+            assert p.n_microbatches == 4
+            # two-stage pipeline bound: first transfer and last compute
+            # exposed, max(T, C) per step in between
+            expect = (
+                p.transfer_cycles_per_microbatch
+                + 3 * max(
+                    p.transfer_cycles_per_microbatch,
+                    p.compute_cycles_per_microbatch,
+                )
+                + p.compute_cycles_per_microbatch
+            )
+            assert abs(p.streamed_cycles - expect) < 1e-6
+            sync1 = streaming_spmv_perf(
+                sell, system, k=64, microbatch=16, depth=1
+            )
+            assert sync1.speedup == 1.0
+            assert sync1.streamed_cycles == sync1.sync_cycles
+            assert p.streamed_spmv_per_s >= sync1.streamed_spmv_per_s
+
+
+def test_streaming_microbatch_clamps_and_validates():
+    p = streaming_spmv_perf(BANDED, "pack256", k=4, microbatch=64, depth=2)
+    assert p.microbatch == 4 and p.n_microbatches == 1
+    with pytest.raises(ValueError, match="k"):
+        streaming_spmv_perf(BANDED, "pack256", k=0, microbatch=4)
+    with pytest.raises(ValueError, match="depth"):
+        streaming_spmv_perf(BANDED, "pack256", k=4, microbatch=4, depth=0)
+
+
+def test_streaming_bottleneck_identifies_transfer_bound_shapes():
+    """A short-and-wide matrix (RHS traffic dwarfs the matrix work) is
+    transfer-bound; the deep banded suite matrix is compute-bound. The
+    reported bottleneck and the steady-state bound must agree."""
+    from repro.core.formats import CSRMatrix
+
+    n_rows, n_cols, per_row = 64, 100_000, 4
+    rng = np.random.default_rng(5)
+    indices = np.sort(
+        rng.choice(n_cols, size=(n_rows, per_row), replace=False), axis=1
+    ).reshape(-1).astype(np.int64)
+    wide = csr_to_sell(CSRMatrix(
+        n_rows=n_rows,
+        n_cols=n_cols,
+        indptr=np.arange(n_rows + 1, dtype=np.int64) * per_row,
+        indices=indices,
+        data=np.ones(n_rows * per_row),
+    ))
+    p = streaming_spmv_perf(wide, "pack256", k=32, microbatch=8, depth=2)
+    assert p.bottleneck == "transfer"
+    assert p.transfer_cycles_per_microbatch > p.compute_cycles_per_microbatch
+    # the pipeline bound holds on transfer-bound shapes too (regression: the
+    # overlap term must never claim streaming is slower than sync)
+    assert p.speedup >= 1.0
+    assert 0.0 <= p.overlap_efficiency <= 1.0
+    one = streaming_spmv_perf(wide, "pack256", k=4, microbatch=8, depth=2)
+    assert one.n_microbatches == 1
+    assert one.speedup == 1.0  # nothing to overlap with a single micro-batch
+    deep = streaming_spmv_perf(BANDED, "pack256", k=32, microbatch=8, depth=2)
+    assert deep.bottleneck == "compute"
 
 
 def test_area_model_matches_paper_points():

@@ -1,0 +1,490 @@
+"""Streaming executor layer: streamed-vs-sync parity is the contract.
+
+`StreamingExecutor` output must be *bit-identical* to the wrapped engine's
+plain `matmat` on the reference backend — across microbatch sizes, depths,
+widths with W % cols_per_chunk != 0, and both the single-device and sharded
+engines — and within 1e-5 through the pallas backend (interpret mode
+off-TPU). The in-process tests run on whatever devices exist; the `slow`
+subprocess test forces an 8-device CPU mesh, which is also what CI's
+`streaming-smoke` job uses.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core import (
+    ShardedSpMVEngine,
+    SpMVEngine,
+    StreamingExecutor,
+    clear_engine_cache,
+    clear_schedule_cache,
+    column_groups,
+    csr_to_sell,
+    microbatch_slices,
+    normalize_to_sell,
+    parse_stream_spec,
+)
+from repro.core.formats import dense_to_csr
+from repro.core.matrices import banded, powerlaw
+from repro.core.runtime import Executor, pad_width
+
+REPO = Path(__file__).resolve().parent.parent
+RNG = np.random.default_rng(77)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_engine_cache()
+    clear_schedule_cache()
+    yield
+
+
+def _sell_case(n_rows, n_cols, density, slice_height, seed, force_width=None):
+    """Random SELL matrix; `force_width` pins the max slice width so cases
+    can guarantee W % cols_per_chunk != 0 coverage deterministically."""
+    rng = np.random.default_rng(seed)
+    if force_width is None:
+        dense = rng.standard_normal((n_rows, n_cols)) * (
+            rng.random((n_rows, n_cols)) < density
+        )
+    else:
+        dense = np.zeros((n_rows, n_cols))
+        for r in range(n_rows):
+            k = force_width if r == 0 else int(rng.integers(1, force_width + 1))
+            cols = rng.choice(n_cols, size=k, replace=False)
+            dense[r, cols] = rng.standard_normal(k)
+    return csr_to_sell(dense_to_csr(dense), slice_height=slice_height)
+
+
+# ---------------------------------------------------------------------------
+# Streamed-vs-sync parity (the acceptance property)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_rows=st.integers(8, 90),
+    n_cols=st.integers(16, 120),
+    slice_height=st.sampled_from([8, 16]),
+    density=st.floats(0.05, 0.3),
+    k=st.integers(1, 17),
+    microbatch=st.sampled_from([1, 2, 3, 5, 8, 32]),
+    depth=st.sampled_from([1, 2, 4]),
+    n_shards=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_streamed_matmat_bit_identical_to_sync_reference(
+    n_rows, n_cols, slice_height, density, k, microbatch, depth, n_shards,
+    seed,
+):
+    """Property: on the reference backend, streaming is numerically
+    invisible — any microbatch/depth split of any RHS batch, through the
+    single-device or the sharded engine, reproduces plain matmat bit for
+    bit (k < microbatch, k % microbatch != 0, and depth > n_microbatches
+    edges included)."""
+    sell = _sell_case(n_rows, n_cols, density, slice_height, seed)
+    X = np.random.default_rng(seed + 1).standard_normal(
+        (sell.n_cols, k)
+    ).astype(np.float32)
+    single = SpMVEngine(sell, backend="reference")
+    Y = np.asarray(single.matmat(X))
+    if n_shards == 1:
+        engine = single
+    else:
+        engine = ShardedSpMVEngine(
+            sell, backend="reference", n_shards=n_shards
+        )
+    streamer = StreamingExecutor(engine, microbatch=microbatch, depth=depth)
+    np.testing.assert_array_equal(np.asarray(streamer.matmat(X)), Y)
+
+
+def test_streamed_pallas_within_tolerance_and_odd_width():
+    """Pallas engines (interpret mode off-TPU) stream through the same
+    pipeline: within the 1e-5 gate of the sync reference, on a width with
+    W % cols_per_chunk != 0 so the width-aware replan is in the loop."""
+    sell = _sell_case(33, 80, 0.2, 8, seed=2, force_width=13)
+    X = jnp.asarray(RNG.standard_normal((sell.n_cols, 6)).astype(np.float32))
+    y_ref = np.asarray(SpMVEngine(sell, backend="reference").matmat(X))
+    pal = SpMVEngine(sell, backend="pallas", cols_per_chunk=4)
+    streamer = StreamingExecutor(pal, microbatch=4, depth=2)
+    y_stream = np.asarray(streamer.matmat(X))
+    assert np.abs(y_stream - y_ref).max() <= 1e-5
+    # and streamed pallas == sync pallas bit for bit (same compiled fn,
+    # same per-column program)
+    np.testing.assert_array_equal(y_stream, np.asarray(pal.matmat(X)))
+
+
+def test_streamed_matvec_and_empty_batch():
+    sell = _sell_case(40, 64, 0.15, 8, seed=5)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=4, depth=2)
+    x = jnp.asarray(RNG.standard_normal(sell.n_cols).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(streamer.matvec(x)), np.asarray(eng.matvec(x))
+    )
+    empty = streamer.matmat(np.zeros((sell.n_cols, 0), np.float32))
+    assert empty.shape == (sell.n_rows, 0)
+    # __call__ dispatches on rank like the engines
+    np.testing.assert_array_equal(
+        np.asarray(streamer(x)), np.asarray(eng.matvec(x))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pipeline mechanics: protocol, submit/drain, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_engines_implement_executor_protocol():
+    sell = _sell_case(32, 48, 0.2, 8, seed=7)
+    single = SpMVEngine(sell, backend="reference")
+    sharded = ShardedSpMVEngine(sell, backend="reference", n_shards=2)
+    assert isinstance(single, Executor)
+    assert isinstance(sharded, Executor)
+    # the pipeline identity the protocol demands: matmat == finalize .
+    # dispatch . stage
+    X = jnp.asarray(RNG.standard_normal((sell.n_cols, 5)).astype(np.float32))
+    for eng in (single, sharded):
+        np.testing.assert_array_equal(
+            np.asarray(eng.finalize(eng.dispatch(eng.stage(X)))),
+            np.asarray(eng.matmat(X)),
+        )
+    with pytest.raises(TypeError, match="Executor"):
+        StreamingExecutor(object())
+
+
+def test_submit_drain_order_and_backpressure():
+    """drain() returns results in submission order; the in-flight window
+    never exceeds depth (the bounded-queue backpressure contract)."""
+    sell = _sell_case(48, 64, 0.15, 8, seed=9)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=2, depth=3)
+    rng = np.random.default_rng(10)
+    batches = [
+        rng.standard_normal((sell.n_cols, k)).astype(np.float32)
+        for k in (5, 1, 7, 4)
+    ]
+    max_seen = 0
+    handles = []
+    for B in batches:
+        handles.append(streamer.submit(B))
+        assert streamer.in_flight <= 3
+        max_seen = max(max_seen, streamer.in_flight)
+    outs = streamer.drain()
+    assert streamer.in_flight == 0
+    assert max_seen == 3  # the window actually filled
+    assert [o.shape[1] for o in outs] == [5, 1, 7, 4]
+    for B, out in zip(batches, outs):
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(eng.matmat(B))
+        )
+    for h in handles:  # drained handles are complete, nothing re-runs
+        assert h.done
+    assert streamer.drain() == []  # idle drain is a no-op
+
+
+def test_stream_handle_result_blocks_for_its_batch_only():
+    sell = _sell_case(48, 64, 0.15, 8, seed=11)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=4, depth=2)
+    rng = np.random.default_rng(12)
+    A = rng.standard_normal((sell.n_cols, 6)).astype(np.float32)
+    B = rng.standard_normal((sell.n_cols, 3)).astype(np.float32)
+    ha = streamer.submit(A)
+    hb = streamer.submit(B)
+    np.testing.assert_array_equal(
+        np.asarray(ha.result()), np.asarray(eng.matmat(A))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(hb.result()), np.asarray(eng.matmat(B))
+    )
+    assert streamer.drain() == []  # both batches already collected
+
+
+def test_concurrent_submitters_keep_parity():
+    """The advertised serving pattern: multiple request threads share one
+    pipeline. Every thread's result must match the sync engine (delivery is
+    per-handle; the bounded window and the finalize-outside-lock retirement
+    must not cross wires between threads)."""
+    import threading
+
+    sell = _sell_case(64, 96, 0.15, 8, seed=21)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=3, depth=2)
+    rng = np.random.default_rng(22)
+    mats = [
+        rng.standard_normal((sell.n_cols, 7)).astype(np.float32)
+        for _ in range(12)
+    ]
+    expected = [np.asarray(eng.matmat(m)) for m in mats]
+    results = [None] * len(mats)
+
+    def worker(lo, hi):
+        for i in range(lo, hi):
+            results[i] = np.asarray(streamer.submit(mats[i]).result())
+
+    threads = [
+        threading.Thread(target=worker, args=(j * 3, j * 3 + 3))
+        for j in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert streamer.drain() == []  # every handle was collected by its thread
+    for got, want in zip(results, expected):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_drain_does_not_redeliver_a_batch_collected_via_result():
+    """A batch collected via result() is not returned again by drain() —
+    double delivery of a request's result to the sweeping collector is a
+    serving bug. (result() itself stays idempotent for the handle's owner,
+    like a future.)"""
+    sell = _sell_case(48, 64, 0.15, 8, seed=25)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=4, depth=2)
+    rng = np.random.default_rng(26)
+    A = rng.standard_normal((sell.n_cols, 5)).astype(np.float32)
+    B = rng.standard_normal((sell.n_cols, 3)).astype(np.float32)
+    ha = streamer.submit(A)
+    hb = streamer.submit(B)
+    ha.result()
+    outs = streamer.drain()
+    assert len(outs) == 1  # only B; A was already collected
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(eng.matmat(B)))
+
+
+def test_pipeline_failure_fails_the_handle_instead_of_wedging():
+    """An executor error mid-pipeline must surface on the failed batch's
+    result() and leave the pipeline drainable — not hang every waiter."""
+    sell = _sell_case(48, 64, 0.15, 8, seed=27)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=4, depth=2)
+    rng = np.random.default_rng(28)
+    X = rng.standard_normal((sell.n_cols, 6)).astype(np.float32)
+
+    boom = RuntimeError("device fell over")
+    real_finalize = eng.finalize
+    eng.finalize = lambda pending: (_ for _ in ()).throw(boom)
+    try:
+        h = streamer.submit(X)
+        with pytest.raises(RuntimeError, match="device fell over"):
+            h.result()
+        assert h.done and h.failed
+    finally:
+        eng.finalize = real_finalize
+    assert streamer.drain() == []  # nothing wedged in flight
+    # the pipeline is still usable afterwards
+    np.testing.assert_array_equal(
+        np.asarray(streamer.matmat(X)), np.asarray(eng.matmat(X))
+    )
+
+
+def test_drain_raises_failed_batch_but_keeps_healthy_results():
+    """One bad request must not destroy the others: drain() raises the
+    failed batch's error and consumes only that batch; a retry drain()
+    returns every healthy result."""
+    sell = _sell_case(48, 64, 0.15, 8, seed=31)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=8, depth=2)
+    rng = np.random.default_rng(32)
+    bad = rng.standard_normal((sell.n_cols, 4)).astype(np.float32)
+    good = rng.standard_normal((sell.n_cols, 4)).astype(np.float32)
+
+    real_finalize = eng.finalize
+    calls = {"n": 0}
+
+    def flaky(pending):
+        calls["n"] += 1
+        if calls["n"] == 1:  # the first retirement is the first submission
+            raise RuntimeError("transient device error")
+        return real_finalize(pending)
+
+    eng.finalize = flaky
+    try:
+        streamer.submit(bad)
+        streamer.submit(good)
+        with pytest.raises(RuntimeError, match="transient"):
+            streamer.drain()
+        outs = streamer.drain()  # healthy batch survived the failure
+    finally:
+        eng.finalize = real_finalize
+    assert len(outs) == 1
+    np.testing.assert_array_equal(
+        np.asarray(outs[0]), np.asarray(eng.matmat(good))
+    )
+
+
+def test_executor_identity_holds_for_empty_batch():
+    """The protocol identity matmat == finalize . dispatch . stage includes
+    the k=0 edge on both engines (shape and dtype preserved)."""
+    sell = _sell_case(40, 64, 0.15, 8, seed=29)
+    for eng in (
+        SpMVEngine(sell, backend="reference"),
+        ShardedSpMVEngine(sell, backend="reference", n_shards=2),
+    ):
+        X0 = np.zeros((sell.n_cols, 0), np.float32)
+        direct = np.asarray(eng.matmat(X0))
+        piped = np.asarray(eng.finalize(eng.dispatch(eng.stage(X0))))
+        assert direct.shape == piped.shape == (sell.n_rows, 0)
+        assert piped.dtype == np.float32
+
+
+def test_streaming_executor_validation():
+    sell = _sell_case(32, 48, 0.2, 8, seed=13)
+    eng = SpMVEngine(sell, backend="reference")
+    with pytest.raises(ValueError, match="microbatch"):
+        StreamingExecutor(eng, microbatch=0)
+    with pytest.raises(ValueError, match="depth"):
+        StreamingExecutor(eng, depth=0)
+    streamer = StreamingExecutor(eng)
+    with pytest.raises(ValueError, match="submit"):
+        streamer.submit(np.zeros((sell.n_cols + 1, 2), np.float32))
+    with pytest.raises(ValueError, match="matvec"):
+        streamer.matvec(np.zeros(sell.n_cols + 1, np.float32))
+
+
+def test_streaming_plan_report_carries_overlap_prediction():
+    sell = _sell_case(48, 64, 0.15, 8, seed=15)
+    streamer = StreamingExecutor(
+        SpMVEngine(sell, backend="reference"), microbatch=8, depth=2
+    )
+    rep = streamer.plan_report(k=32)
+    s = rep["streaming"]
+    assert (s["k"], s["microbatch"], s["depth"]) == (32, 8, 2)
+    p = s["perf"]["pack256"]
+    assert p["speedup"] >= 1.0
+    assert p["streamed_cycles"] <= p["sync_cycles"]
+    # sharded engines report through the same path
+    rep_sh = StreamingExecutor(
+        ShardedSpMVEngine(sell, backend="reference", n_shards=2),
+        microbatch=4,
+    ).plan_report()
+    assert rep_sh["streaming"]["perf"]["pack256"]["speedup"] >= 1.0
+    assert "shards" in rep_sh
+
+
+# ---------------------------------------------------------------------------
+# Shared geometry helpers
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_slices_fixed_size_and_tail():
+    assert microbatch_slices(10, 4) == [
+        slice(0, 4), slice(4, 8), slice(8, 10)
+    ]
+    assert microbatch_slices(3, 8) == [slice(0, 3)]
+    assert microbatch_slices(0, 4) == []
+    assert sum(s.stop - s.start for s in microbatch_slices(23, 5)) == 23
+    with pytest.raises(ValueError, match="microbatch"):
+        microbatch_slices(4, 0)
+
+
+def test_parse_stream_spec():
+    assert parse_stream_spec("depth=3,microbatch=16") == {
+        "depth": 3, "microbatch": 16
+    }
+    assert parse_stream_spec("microbatch=8")["depth"] == 2  # default
+    assert parse_stream_spec("") == {"depth": 2, "microbatch": 32}
+    for bad in ("depth=0", "bogus=3", "depth", "depth=x"):
+        with pytest.raises(ValueError, match="stream"):
+            parse_stream_spec(bad)
+
+
+def test_normalize_to_sell_shared_by_engines():
+    dense = np.zeros((12, 16))
+    dense[0, :5] = 1.0
+    csr = dense_to_csr(dense)
+    sell = normalize_to_sell(csr, slice_height=4)
+    assert sell.slice_height == 4
+    assert normalize_to_sell(sell) is sell  # SELL passes through
+    with pytest.raises(ValueError, match="slice_height"):
+        normalize_to_sell(sell, slice_height=8)
+    with pytest.raises(TypeError, match="CSRMatrix or SELLMatrix"):
+        normalize_to_sell(np.zeros((3, 3)))
+
+
+def test_pad_width_identity_and_padding():
+    ci = np.arange(2 * 5 * 4, dtype=np.int32).reshape(2, 5, 4) % 7
+    va = np.ones((2, 5, 4), np.float32)
+    same = pad_width(ci, va, multiple=1)
+    assert same[0] is ci and same[2] == 5
+    ci_p, va_p, W_plan = pad_width(ci, va, multiple=4)
+    assert W_plan == 8 and ci_p.shape == (2, 8, 4)
+    np.testing.assert_array_equal(ci_p[:, :5], ci)
+    assert (ci_p[:, 5:] == 0).all() and (va_p[:, 5:] == 0).all()
+
+
+def test_column_groups_reexported_from_runtime():
+    # moved from core.dist to core.runtime; the public import path and the
+    # semantics are unchanged
+    from repro.core import dist
+
+    assert dist.column_groups is column_groups
+    assert column_groups(8, 2) == [slice(0, 4), slice(4, 8)]
+
+
+# ---------------------------------------------------------------------------
+# Forced 8-device mesh (what CI's streaming-smoke job runs)
+# ---------------------------------------------------------------------------
+
+
+MULTIDEV_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import (ShardedSpMVEngine, SpMVEngine, StreamingExecutor,
+                            csr_to_sell)
+    from repro.core.matrices import banded
+
+    sell = csr_to_sell(banded(300, 16, 0.7)(np.random.default_rng(0)),
+                       slice_height=8)
+    X = np.random.default_rng(1).standard_normal(
+        (sell.n_cols, 11)).astype(np.float32)
+    single = SpMVEngine(sell, backend="reference")
+    Y = np.asarray(single.matmat(X))
+    sharded = ShardedSpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(sharded, microbatch=4, depth=2)
+    bitwise = bool(np.array_equal(np.asarray(streamer.matmat(X)), Y))
+    h1 = streamer.submit(X[:, :5]); h2 = streamer.submit(X[:, 5:])
+    outs = streamer.drain()
+    drained = bool(np.array_equal(np.concatenate(outs, axis=1), Y))
+    print(json.dumps({
+        "n_dev": len(jax.devices()),
+        "mesh": [sharded.n_data, sharded.n_model],
+        "bitwise": bitwise,
+        "drained": drained,
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_streamed_sharded_parity_on_forced_8_device_mesh():
+    """Acceptance: the sharded StreamingExecutor on a real (4, 2) mesh over
+    8 forced host devices is bit-identical to the single-device synchronous
+    engine, through both matmat and submit/drain."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SNIPPET],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_dev"] == 8
+    assert res["mesh"] == [4, 2]
+    assert res["bitwise"] and res["drained"]
