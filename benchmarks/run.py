@@ -20,11 +20,15 @@ import numpy as np
 PARITY_TOL = 1e-5
 SMOKE_JSON = "BENCH_smoke.json"
 STREAM_JSON = "BENCH_stream.json"
+MATMAT_JSON = "BENCH_matmat.json"
 # Streamed serving must not be slower than the synchronous loop. Gated on
 # the median of paired per-trial ratios (drift-cancelling); the margin
 # absorbs residual CPU jitter — a real pipelining regression blows well
 # past 10%.
 STREAM_JITTER_TOL = 1.10
+# Same policy for the fused matmat kernel vs the vmapped per-column path at
+# k >= k_tile (where the matrix-stream amortization must win).
+MATMAT_JITTER_TOL = 1.10
 
 
 def _kernel_microbench() -> None:
@@ -310,6 +314,170 @@ def _streaming_smoke() -> dict:
     }
 
 
+def _matmat_smoke() -> dict:
+    """Fused-vs-vmapped matmat rows + the amortization gates.
+
+    The fused `kernels.sell_spmm` kernel must (a) agree with the vmapped
+    per-column path and the reference backend to PARITY_TOL at every tested
+    k — including k < k_tile (clamped tile) and k % k_tile != 0 (padded
+    tail tile) — (b) beat-or-tie vmapped throughput at k >= k_tile, where
+    one pass over the schedule and the SELL values serves k_tile columns
+    instead of one, and (c) track the perf model: `matmat_spmv_perf` must
+    predict the amortization trend (speedup growing from ~1 at k=1 to > 1
+    at k >> k_tile). Throughput uses interleaved paired trials gated on the
+    median per-trial ratio, like the streaming gate — absolute timings on
+    shared CI CPUs drift too much to compare across blocks."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.dist import ShardedSpMVEngine
+    from repro.core.engine import SpMVEngine
+    from repro.core.formats import csr_to_sell
+    from repro.core.matrices import banded
+    from repro.core.perfmodel import matmat_spmv_perf
+    from .common import emit
+
+    k_tile = 8
+    ks = (1, k_tile - 1, k_tile, 4 * k_tile)
+    k_gate = 4 * k_tile
+    trials = 7
+    csr = banded(512, 16, 0.7)(np.random.default_rng(0))
+    sell = csr_to_sell(csr)
+    rng = np.random.default_rng(1)
+    eng = SpMVEngine(sell, backend="pallas", k_tile=k_tile)
+    ref = SpMVEngine(sell, backend="reference")
+    assert eng.matmat_mode_resolved == "fused"
+
+    parity: dict = {}
+    predicted: dict = {}
+    for k in ks:
+        X = jnp.asarray(
+            rng.standard_normal((sell.n_cols, k)).astype(np.float32)
+        )
+        y_fused = np.asarray(jax.block_until_ready(eng.matmat(X)))
+        y_vmapped = np.asarray(jax.block_until_ready(eng.matmat_vmapped(X)))
+        y_ref = np.asarray(jax.block_until_ready(ref.matmat(X)))
+        parity[str(k)] = {
+            "fused_vs_vmapped": float(np.abs(y_fused - y_vmapped).max()),
+            "fused_vs_reference": float(np.abs(y_fused - y_ref).max()),
+        }
+        predicted[str(k)] = round(
+            matmat_spmv_perf(sell, "pack256", k=k, k_tile=k_tile).speedup, 4
+        )
+        emit(
+            f"matmat/parity/k{k}", 0.0,
+            f"n={sell.n_rows};k_tile={k_tile};"
+            f"fused_vs_vmapped={parity[str(k)]['fused_vs_vmapped']:.2e};"
+            f"fused_vs_reference={parity[str(k)]['fused_vs_reference']:.2e};"
+            f"predicted_speedup_pack256={predicted[str(k)]}",
+        )
+
+    # Throughput: fused vs vmapped at k >= k_tile, paired interleaved trials
+    # (median per-trial ratio cancels machine-wide drift; order alternates so
+    # cache/thermal carryover cancels over the trial set too).
+    X = jnp.asarray(
+        rng.standard_normal((sell.n_cols, k_gate)).astype(np.float32)
+    )
+
+    def run_fused():
+        jax.block_until_ready(eng.matmat(X))
+
+    def run_vmapped():
+        jax.block_until_ready(eng.matmat_vmapped(X))
+
+    def timed(fn) -> float:
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    for fn in (run_fused, run_vmapped):
+        fn()  # warm both compiled paths
+    fused_times, vmapped_times = [], []
+    for i in range(trials):
+        first, second = (
+            (run_fused, run_vmapped) if i % 2 == 0
+            else (run_vmapped, run_fused)
+        )
+        a, b = timed(first), timed(second)
+        f, v = (a, b) if i % 2 == 0 else (b, a)
+        fused_times.append(f)
+        vmapped_times.append(v)
+    fused_us = min(fused_times) * 1e6
+    vmapped_us = min(vmapped_times) * 1e6
+    speedup = float(np.median(
+        [v / f for v, f in zip(vmapped_times, fused_times)]
+    ))
+    emit(
+        f"matmat/throughput/vmapped_k{k_gate}", vmapped_us,
+        f"n={sell.n_rows};k={k_gate}",
+    )
+    emit(
+        f"matmat/throughput/fused_k{k_gate}", fused_us,
+        f"n={sell.n_rows};k={k_gate};k_tile={k_tile};"
+        f"speedup={speedup:.2f};"
+        f"predicted_speedup_pack256={predicted[str(k_gate)]}",
+    )
+
+    # Sharded engine: every shard's matmat routes through the fused kernel
+    # on its own device; the decomposition must still match the
+    # single-device reference.
+    sharded = ShardedSpMVEngine(sell, backend="pallas", k_tile=k_tile)
+    X8 = jnp.asarray(
+        rng.standard_normal((sell.n_cols, k_tile)).astype(np.float32)
+    )
+    err_sharded = float(np.abs(
+        np.asarray(sharded.matmat(X8)) - np.asarray(ref.matmat(X8))
+    ).max())
+    d, m = sharded.n_data, sharded.n_model
+    emit(
+        f"matmat/sharded_mesh_{d}x{m}", 0.0,
+        f"n={sell.n_rows};k={k_tile};shards={sharded.n_shards};"
+        f"max_abs_err={err_sharded:.2e}",
+    )
+
+    return {
+        "k_tile": k_tile,
+        "ks": list(ks),
+        "trials": trials,
+        "parity": parity,
+        "sharded": {
+            "mesh": [d, m],
+            "n_shards": sharded.n_shards,
+            "max_abs_err": err_sharded,
+        },
+        "throughput": {
+            "k": k_gate,
+            "fused_us": round(fused_us, 1),
+            "vmapped_us": round(vmapped_us, 1),
+            "speedup": round(speedup, 3),  # median paired per-trial ratio
+            "jitter_tol": MATMAT_JITTER_TOL,
+        },
+        # model side of the amortization story: speedup(k) per pack256
+        "predicted_speedup_pack256": predicted,
+    }
+
+
+def _matmat_gate(matmat: dict) -> dict:
+    """Fused-matmat failures, empty when clean: parity within PARITY_TOL at
+    every k, fused >= vmapped throughput at k >= k_tile within the jitter
+    tolerance, and the perf model predicting the amortization trend (NaN
+    comparisons are written to fail, as in the other gates)."""
+    bad = {}
+    for k, errs in matmat["parity"].items():
+        for name, err in errs.items():
+            if not (err <= PARITY_TOL):
+                bad[f"matmat-parity-k{k}-{name}"] = err
+    if not (matmat["sharded"]["max_abs_err"] <= PARITY_TOL):
+        bad["matmat-sharded-parity"] = matmat["sharded"]["max_abs_err"]
+    if not (matmat["throughput"]["speedup"] * MATMAT_JITTER_TOL >= 1.0):
+        bad["matmat-throughput"] = matmat["throughput"]["speedup"]
+    pred = matmat["predicted_speedup_pack256"]
+    k_hi = str(max(matmat["ks"]))
+    if not (pred[k_hi] > 1.0 and pred[k_hi] >= pred["1"]):
+        bad["matmat-model-trend"] = pred
+    return bad
+
+
 def _stream_gate(stream: dict) -> dict:
     """Streaming failures, empty when clean: reference parity must be exact,
     pallas within PARITY_TOL, and the median paired streamed-vs-sync ratio
@@ -339,15 +507,22 @@ def main() -> None:
         "core.runtime.StreamingExecutor; writes BENCH_stream.json and gates "
         "parity + streamed>=sync throughput (implies ci scale)",
     )
+    ap.add_argument(
+        "--matmat", action="store_true",
+        help="fused-vs-vmapped matmat rows through the sell_spmm kernel; "
+        "writes BENCH_matmat.json and gates parity (1e-5 at every k) + "
+        "fused>=vmapped throughput at k>=k_tile + the perf-model "
+        "amortization trend (implies ci scale)",
+    )
     args = ap.parse_args()
-    if args.smoke or args.stream:
+    if args.smoke or args.stream or args.matmat:
         os.environ["BENCH_SCALE"] = "ci"  # before .common reads it
 
     t0 = time.time()
     from . import common, engine_cache, fig5_spmv
 
     print("name,us_per_call,derived")
-    if args.smoke or args.stream:
+    if args.smoke or args.stream or args.matmat:
         parity: dict = {}
         sharded = None
         if args.smoke:
@@ -357,6 +532,7 @@ def main() -> None:
             parity = _backend_parity_check()
             sharded = _sharded_smoke()
         stream = _streaming_smoke() if args.stream else None
+        matmat = _matmat_smoke() if args.matmat else None
         total_s = time.time() - t0
         bad = {k: v for k, v in parity.items() if not (v <= PARITY_TOL)}
         if args.smoke:
@@ -398,6 +574,23 @@ def main() -> None:
                 json.dump(stream_payload, f, indent=2)
             print(f"# wrote {STREAM_JSON} (speedup {stream['speedup']:.2f})")
             bad.update(_stream_gate(stream))
+        if matmat is not None:
+            matmat_payload = {
+                "scale": os.environ.get("BENCH_SCALE", "ci"),
+                "parity_tol": PARITY_TOL,
+                "matmat": matmat,
+                "rows": [
+                    r for r in common.rows() if r["name"].startswith("matmat/")
+                ],
+            }
+            with open(MATMAT_JSON, "w") as f:
+                json.dump(matmat_payload, f, indent=2)
+            print(
+                f"# wrote {MATMAT_JSON} (fused speedup "
+                f"{matmat['throughput']['speedup']:.2f} at "
+                f"k={matmat['throughput']['k']})"
+            )
+            bad.update(_matmat_gate(matmat))
         print(f"# total {total_s:.1f}s (smoke)")
         if bad:
             print(

@@ -27,6 +27,7 @@ from .engine import (  # noqa: F401
     engine_cache_stats,
     get_engine,
     resolve_backend,
+    resolve_matmat_mode,
     resolve_window,
     schedule_cache_stats,
     stream_digest,
@@ -57,7 +58,17 @@ from .perfmodel import (  # noqa: F401
     HWConfig,
     adapter_area_model,
     indirect_stream_perf,
+    matmat_spmv_perf,
+    plan_matmat_cycles,
     spmv_perf,
     streaming_spmv_perf,
+)
+from .tune import (  # noqa: F401
+    TUNE_CACHE_ENV,
+    TunedPlan,
+    autotune,
+    clear_tune_cache,
+    get_tuned_engine,
+    tune_stats,
 )
 from .spmv import spmv_csr, spmv_sell, spmv_sell_coalesced  # noqa: F401

@@ -53,9 +53,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .coalescer import coalesce_stats
-from .engine import DEFAULT_COLS_PER_CHUNK, get_engine, resolve_backend
+from .engine import DEFAULT_COLS_PER_CHUNK, DEFAULT_K_TILE, get_engine, \
+    resolve_backend
 from .formats import CSRMatrix, SELLMatrix
-from .perfmodel import streaming_spmv_perf
+from .perfmodel import matmat_spmv_perf, streaming_spmv_perf
 from .runtime import column_groups, data_model_grid, device_put_rhs, \
     normalize_to_sell, proper_slice
 
@@ -139,10 +140,12 @@ class ShardedSpMVEngine:
     round-robin shards over the mesh rows.
 
     All plan parameters (``window``, ``block_rows``, ``backend``,
-    ``cols_per_chunk``, ``cache_dir``) are forwarded to every shard's
-    `SpMVEngine`, so backends, window resolution, the content-addressed
-    schedule cache, and npz persistence all behave exactly as on the
-    single-device engine — per shard.
+    ``cols_per_chunk``, ``k_tile``, ``matmat_mode``, ``cache_dir``) are
+    forwarded to every shard's `SpMVEngine`, so backends, window resolution,
+    the fused multi-column matmat routing, the content-addressed schedule
+    cache, and npz persistence all behave exactly as on the single-device
+    engine — per shard (a pallas-backed sharded matmat streams each shard's
+    schedule and values once per `k_tile` RHS columns on its own device).
     """
 
     def __init__(
@@ -157,6 +160,8 @@ class ShardedSpMVEngine:
         width_multiple: int = 1,
         backend: str = "auto",
         cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
+        k_tile: int = DEFAULT_K_TILE,
+        matmat_mode: str = "auto",
         cache_dir: Optional[str] = None,
     ):
         sell = normalize_to_sell(
@@ -187,6 +192,8 @@ class ShardedSpMVEngine:
                 block_rows=block_rows,
                 backend=backend,
                 cols_per_chunk=cols_per_chunk,
+                k_tile=k_tile,
+                matmat_mode=matmat_mode,
                 cache_dir=cache_dir,
             )
             for shard, _, _ in self._shards
@@ -326,7 +333,8 @@ class ShardedSpMVEngine:
         return [p for p in paths if p is not None]
 
     def plan_report(
-        self, *, stream: Optional[Dict[str, int]] = None
+        self, *, stream: Optional[Dict[str, int]] = None,
+        k: Optional[int] = None,
     ) -> Dict[str, object]:
         """Aggregate plan report plus per-shard coalesce stats.
 
@@ -336,7 +344,8 @@ class ShardedSpMVEngine:
         the per-memory-bank view of the paper's Sec. II-B statistics.
         ``stream={"k": ..., "microbatch": ..., "depth": ...}`` adds the perf
         model's streamed-throughput prediction for the whole matrix under
-        ``streaming`` (see `SpMVEngine.plan_report`).
+        ``streaming``; ``k=`` adds the whole-matrix matmat amortization
+        prediction under ``matmat`` (see `SpMVEngine.plan_report`).
         """
         shard_reports: List[Dict[str, object]] = []
         total_wide = 0
@@ -366,12 +375,27 @@ class ShardedSpMVEngine:
         streaming = None
         if stream is not None:
             streaming = {
-                **{k: int(v) for k, v in stream.items()},
+                **{key: int(v) for key, v in stream.items()},
                 "perf": {
                     system: dataclasses.asdict(
                         streaming_spmv_perf(self.sell, system, **stream)
                     )
                     for system in ("base", "pack256")
+                },
+            }
+        matmat = None
+        if k is not None:
+            k_tile = self.engines[0].k_tile
+            matmat = {
+                "k": int(k),
+                "k_tile": k_tile,
+                "mode": self.engines[0].matmat_mode_resolved,
+                "perf": {
+                    system: dataclasses.asdict(
+                        matmat_spmv_perf(self.sell, system, k=int(k),
+                                         k_tile=k_tile)
+                    )
+                    for system in ("pack0", "pack256")
                 },
             }
         return {
@@ -391,4 +415,5 @@ class ShardedSpMVEngine:
             ),
             "shards": shard_reports,
             **({"streaming": streaming} if streaming is not None else {}),
+            **({"matmat": matmat} if matmat is not None else {}),
         }

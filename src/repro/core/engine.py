@@ -13,8 +13,12 @@ module makes the plan a first-class, cached object:
   * `SpMVEngine` — owns one matrix (CSR is converted to SELL up front,
     validated), one schedule, and jit-compiled `matvec(x)` / batched
     `matmat(X)` closures that reuse the schedule across thousands of
-    right-hand sides. `matmat` is `vmap` over RHS columns: one schedule, one
-    compiled program, k columns.
+    right-hand sides. On the pallas backend `matmat` routes through the
+    fused multi-column kernel (`kernels.sell_spmm`): the schedule metadata
+    and SELL values stream once per `k_tile` RHS columns instead of once per
+    column. `matmat_vmapped` keeps the per-column baseline (`vmap` of
+    matvec) compiled alongside it — the reference the fused path is gated
+    against — and the reference backend always executes it.
   * Execution backends — ``backend="reference" | "pallas" | "auto"``. The
     reference backend executes the jnp schedule-gather oracle; the pallas
     backend runs the fused `kernels.sell_spmv` kernel (natively on TPU,
@@ -67,13 +71,16 @@ from . import schedule_store
 from .coalescer import BlockSchedule, build_block_schedule, coalesce_stats, \
     schedule_gather_reference, trim_schedule_warps
 from .formats import CSRMatrix, SELLMatrix
-from .perfmodel import DEFAULT_HW, HWConfig, spmv_perf, streaming_spmv_perf
+from .perfmodel import DEFAULT_HW, HWConfig, matmat_spmv_perf, spmv_perf, \
+    streaming_spmv_perf
 from .runtime import device_put_rhs, normalize_to_sell, pad_width
 
 BACKENDS = ("reference", "pallas", "auto")
 BACKEND_ENV = "REPRO_BACKEND"
 DEFAULT_WINDOW = 256
 DEFAULT_COLS_PER_CHUNK = 8
+DEFAULT_K_TILE = 8
+MATMAT_MODES = ("fused", "vmapped", "auto")
 
 
 def resolve_backend(backend: str) -> str:
@@ -125,6 +132,29 @@ def resolve_window(
             )
         return kernel_window
     return DEFAULT_WINDOW if window is None else int(window)
+
+
+def resolve_matmat_mode(mode: str, backend_resolved: str) -> str:
+    """``"auto"`` routes `matmat` onto the fused multi-column kernel
+    (`kernels.sell_spmm`) on the pallas backend — one pass over the schedule
+    and the SELL values per `k_tile` RHS columns — and onto the vmapped
+    matvec elsewhere (the reference backend has no fused kernel to run; its
+    vmapped path *is* the per-column oracle). ``"vmapped"`` keeps the
+    per-column path on any backend (the fallback/baseline the fused kernel
+    is gated against); ``"fused"`` demands the fused kernel and raises off
+    the pallas backend rather than silently degrading."""
+    if mode not in MATMAT_MODES:
+        raise ValueError(
+            f"matmat_mode must be one of {MATMAT_MODES}, got {mode!r}"
+        )
+    if mode == "auto":
+        return "fused" if backend_resolved == "pallas" else "vmapped"
+    if mode == "fused" and backend_resolved != "pallas":
+        raise ValueError(
+            f"matmat_mode='fused' requires the pallas backend (the fused "
+            f"sell_spmm kernel); backend resolved to {backend_resolved!r}"
+        )
+    return mode
 
 # ---------------------------------------------------------------------------
 # Content-addressed schedule cache
@@ -432,6 +462,14 @@ class SpMVEngine:
     the `BlockSchedule` is built, so the content-addressed cache keys on the
     exact stream and geometry the kernel executes.
 
+    ``k_tile`` sets the fused matmat kernel's RHS tile width (pallas only):
+    one pass over the schedule and the SELL values serves `k_tile` columns.
+    ``matmat_mode`` routes `matmat` — ``"auto"`` (fused on pallas, vmapped
+    elsewhere), ``"vmapped"`` (per-column baseline everywhere), ``"fused"``
+    (demand the fused kernel; raises off pallas). `core.tune.autotune`
+    searches (`cols_per_chunk`, `block_rows`, `k_tile`) for a matrix and
+    feeds the winners back through `get_engine`.
+
     ``plan_width_multiple`` overrides the plan-level width padding (default:
     `cols_per_chunk` for the pallas backend, 1 for the reference backend).
     The reference executor reduces over the real width only, so a padded plan
@@ -456,6 +494,8 @@ class SpMVEngine:
         width_multiple: int = 1,
         backend: str = "auto",
         cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
+        k_tile: int = DEFAULT_K_TILE,
+        matmat_mode: str = "auto",
         plan_width_multiple: Optional[int] = None,
         cache_dir: Optional[str] = None,
     ):
@@ -468,6 +508,13 @@ class SpMVEngine:
         self.cols_per_chunk = int(cols_per_chunk)
         if self.cols_per_chunk < 1:
             raise ValueError(f"cols_per_chunk must be >= 1, got {cols_per_chunk}")
+        self.k_tile = int(k_tile)
+        if self.k_tile < 1:
+            raise ValueError(f"k_tile must be >= 1, got {k_tile}")
+        self.matmat_mode = matmat_mode  # as requested
+        self.matmat_mode_resolved = resolve_matmat_mode(
+            matmat_mode, self.backend_resolved
+        )
         self.block_rows = int(block_rows)
         self.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
 
@@ -494,8 +541,10 @@ class SpMVEngine:
         self._plan = None  # (ci_plan, va_plan, stream, W_real, W_plan)
         self._schedule: Optional[BlockSchedule] = None
         self.plan_cached: Optional[bool] = None  # set when the plan is built
+        self._device_plan = None  # kernels.sell_spmv.DevicePlan (pallas only)
         self._matvec = None
         self._matmat = None
+        self._matmat_vmapped = None
 
     # -- planning ----------------------------------------------------------
 
@@ -590,29 +639,56 @@ class SpMVEngine:
             sell = self.sell
             n_slices, H = sell.n_slices, sell.slice_height
             n_rows, n_out = sell.n_rows, stream.shape[0]
+            _matmat_fused = None
 
             if self.backend_resolved == "pallas":
                 # Locals to the kernels package are lazy: core must stay
                 # importable before kernels (which itself imports core).
                 from repro.kernels.ops import resolve_interpret
-                from repro.kernels.sell_spmv import sell_spmv_pallas
+                from repro.kernels.sell_spmm import sell_spmm_pallas
+                from repro.kernels.sell_spmv import build_device_plan, \
+                    sell_spmv_pallas
 
                 interpret = resolve_interpret()
                 cpc = self.cols_per_chunk
                 block_rows = self.block_rows
-                ci_j = jnp.asarray(ci_plan)
+                kt = self.k_tile
+                # Lower the schedule to the kernel-ready device plan exactly
+                # once; the matvec and the fused matmat kernels share it. The
+                # schedule already encodes every gather, so the column-index
+                # array is never shipped into a kernel call (colidx=None).
+                plan = build_device_plan(
+                    sched, n_slices=n_slices, cols_per_chunk=cpc,
+                    slice_height=H,
+                )
+                self._device_plan = plan
 
                 def _matvec(x: jnp.ndarray) -> jnp.ndarray:
                     y = sell_spmv_pallas(
-                        ci_j,
+                        None,
                         jnp.asarray(va_plan, x.dtype),
                         x,
                         cols_per_chunk=cpc,
                         block_rows=block_rows,
-                        schedule=sched,
+                        plan=plan,
                         interpret=interpret,
                     )
                     return y[:n_rows]
+
+                if self.matmat_mode_resolved == "fused":
+
+                    def _matmat_fused(X: jnp.ndarray) -> jnp.ndarray:
+                        Y = sell_spmm_pallas(
+                            None,
+                            jnp.asarray(va_plan, X.dtype),
+                            X,
+                            cols_per_chunk=cpc,
+                            block_rows=block_rows,
+                            k_tile=kt,
+                            plan=plan,
+                            interpret=interpret,
+                        )
+                        return Y[:n_rows]
 
             else:
 
@@ -625,7 +701,13 @@ class SpMVEngine:
                     return y.reshape(-1)[:n_rows]
 
             self._matvec = jax.jit(_matvec)
-            self._matmat = jax.jit(jax.vmap(_matvec, in_axes=1, out_axes=1))
+            self._matmat_vmapped = jax.jit(
+                jax.vmap(_matvec, in_axes=1, out_axes=1)
+            )
+            self._matmat = (
+                jax.jit(_matmat_fused) if _matmat_fused is not None
+                else self._matmat_vmapped
+            )
         return self._matvec, self._matmat
 
     # -- execution ---------------------------------------------------------
@@ -649,8 +731,16 @@ class SpMVEngine:
         return mv(x)
 
     def matmat(self, X: jnp.ndarray) -> jnp.ndarray:
-        """Y = A @ X for X: (n_cols, k) — vmapped over RHS columns, one
-        schedule shared by all k. Bit-identical per column to `matvec`."""
+        """Y = A @ X for X: (n_cols, k) — one schedule shared by all k.
+
+        On the pallas backend this routes through the fused multi-column
+        kernel (`kernels.sell_spmm`) by default: the schedule metadata and
+        the SELL values stream once per `k_tile` columns instead of once per
+        column, and each coalesced wide fetch grabs a ``(block_rows,
+        k_tile)`` tile of X (within 1e-5 per column of `matvec` — summation
+        order differs inside the MXU tile). The reference backend (and
+        ``matmat_mode="vmapped"``) runs `matmat_vmapped`, which is
+        bit-identical per column to `matvec`."""
         X = jnp.asarray(X)
         if X.ndim != 2 or X.shape[0] != self.sell.n_cols:
             raise ValueError(
@@ -658,6 +748,20 @@ class SpMVEngine:
             )
         _, mm = self._ensure_compiled()
         return mm(X)
+
+    def matmat_vmapped(self, X: jnp.ndarray) -> jnp.ndarray:
+        """The per-column baseline: `matvec` vmapped over RHS columns (one
+        kernel pass per column, bit-identical per column to `matvec`). Kept
+        compiled alongside the fused path on every backend — it is the
+        reference the fused kernel is parity- and throughput-gated against
+        (`benchmarks/run.py --matmat`)."""
+        X = jnp.asarray(X)
+        if X.ndim != 2 or X.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"matmat expects X of shape ({self.sell.n_cols}, k), got {X.shape}"
+            )
+        self._ensure_compiled()
+        return self._matmat_vmapped(X)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self.matvec(x) if jnp.asarray(x).ndim == 1 else self.matmat(x)
@@ -700,6 +804,7 @@ class SpMVEngine:
         hw: HWConfig = DEFAULT_HW,
         *,
         stream: Optional[Dict[str, int]] = None,
+        k: Optional[int] = None,
     ) -> Dict[str, object]:
         """The plan, inspectable: stream/coalescer stats + model predictions.
         Forces planning (this reports on the actual plan, not an estimate).
@@ -707,7 +812,11 @@ class SpMVEngine:
         model's streamed-throughput prediction (transfer/compute overlap —
         `perfmodel.streaming_spmv_perf`) under ``streaming``; wrapping the
         engine in `runtime.StreamingExecutor` and calling its `plan_report`
-        fills these in from the live pipeline shape."""
+        fills these in from the live pipeline shape. ``k=`` adds the matmat
+        amortization prediction under ``matmat`` — fused vs vmapped cycles
+        for a k-column RHS at this plan's `k_tile`
+        (`perfmodel.matmat_spmv_perf`), the model side of the measured
+        comparison `benchmarks/run.py --matmat` gates."""
         sched = self.schedule
         _, _, plan_stream, W, W_plan = self._ensure_plan()
         wide, rate = coalesce_stats(
@@ -723,6 +832,8 @@ class SpMVEngine:
             "backend": self.backend,
             "backend_resolved": self.backend_resolved,
             "cols_per_chunk": self.cols_per_chunk,
+            "k_tile": self.k_tile,
+            "matmat_mode": self.matmat_mode_resolved,
             "window": self.window,
             "block_rows": self.block_rows,
             "n_windows": sched.n_windows,
@@ -737,12 +848,27 @@ class SpMVEngine:
         }
         if stream is not None:
             report["streaming"] = {
-                **{k: int(v) for k, v in stream.items()},
+                **{key: int(v) for key, v in stream.items()},
                 "perf": {
                     system: dataclasses.asdict(
                         streaming_spmv_perf(self.sell, system, hw=hw, **stream)
                     )
                     for system in ("base", "pack256")
+                },
+            }
+        if k is not None:
+            report["matmat"] = {
+                "k": int(k),
+                "k_tile": self.k_tile,
+                "mode": self.matmat_mode_resolved,
+                "perf": {
+                    system: dataclasses.asdict(
+                        matmat_spmv_perf(
+                            self.sell, system, k=int(k), k_tile=self.k_tile,
+                            hw=hw,
+                        )
+                    )
+                    for system in ("pack0", "pack256")
                 },
             }
         return report
@@ -757,24 +883,29 @@ def get_engine(
     width_multiple: int = 1,
     backend: str = "auto",
     cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
+    k_tile: int = DEFAULT_K_TILE,
+    matmat_mode: str = "auto",
     cache_dir: Optional[str] = None,
 ) -> SpMVEngine:
     """Engine cache: same matrix content + plan params -> same engine (and
     therefore same compiled matvec/matmat). CSR inputs are keyed on the SELL
     they convert to, so CSR and its converted SELL share an engine. The key
-    includes the *resolved* backend and the *resolved* window — exactly the
-    resolution `SpMVEngine.__init__` performs, so ``window=None`` and its
-    explicit spelling (256 for reference, `cols_per_chunk * slice_height`
-    for pallas) share one engine instead of duplicating schedules and jit
-    compiles — and, for pallas, `cols_per_chunk`, which shapes its plan.
-    `cache_dir` is not part of the key — it changes where a plan is stored,
-    never what it is. Thread-safe: concurrent callers with the same key get
-    the same engine object."""
+    includes the *resolved* backend, the *resolved* window, and the
+    *resolved* matmat mode — exactly the resolution `SpMVEngine.__init__`
+    performs, so ``window=None`` and its explicit spelling (256 for
+    reference, `cols_per_chunk * slice_height` for pallas) share one engine
+    instead of duplicating schedules and jit compiles — and, for pallas,
+    `cols_per_chunk` and `k_tile`, which shape its plan and its fused matmat
+    executable (the reference backend ignores both, so they stay out of its
+    key). `cache_dir` is not part of the key — it changes where a plan is
+    stored, never what it is. Thread-safe: concurrent callers with the same
+    key get the same engine object."""
     matrix = normalize_to_sell(
         matrix, slice_height=slice_height, width_multiple=width_multiple,
         validate=False,  # O(nnz) scan deferred to construction on a miss
     )
     resolved = resolve_backend(backend)
+    mode_resolved = resolve_matmat_mode(matmat_mode, resolved)
     key = (
         _sell_content_digest(matrix),
         resolve_window(
@@ -785,7 +916,15 @@ def get_engine(
         ),
         block_rows,
         resolved,
-        cols_per_chunk if resolved == "pallas" else None,
+        # k_tile only shapes the *fused* executable; a vmapped pallas engine
+        # ignores it, so resolved-identical configurations share one engine
+        # (the same rule that keeps cols_per_chunk out of reference keys).
+        (
+            cols_per_chunk,
+            k_tile if mode_resolved == "fused" else None,
+            mode_resolved,
+        )
+        if resolved == "pallas" else None,
     )
     adopted = None
     with _engine_lock:
@@ -797,6 +936,8 @@ def get_engine(
                 block_rows=block_rows,
                 backend=backend,
                 cols_per_chunk=cols_per_chunk,
+                k_tile=k_tile,
+                matmat_mode=matmat_mode,
                 cache_dir=cache_dir,
             )
             _engine_cache.put(key, eng)

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -341,6 +341,222 @@ def spmv_perf(
         traffic_ratio=float(offchip / ideal_bytes),
         mem_utilization=float(util),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched matmat (matrix traffic amortized over the RHS batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MatmatPerf:
+    """Predicted vmapped-vs-fused cost of Y = A @ X with k RHS columns.
+
+    The vmapped path re-streams the matrix side — nonzeros, column indices,
+    slice pointers, the coalescer metadata — once *per column*; the fused
+    kernel (`kernels.sell_spmm`) streams it once per ``k_tile`` columns and
+    widens each coalesced x-fetch to a ``(block_rows, k_tile)`` tile of X
+    instead. Per-column costs (the x-gather traffic, the result writeback,
+    the VMACs) are unchanged, so the win is exactly the matrix-traffic
+    amortization — and the loss at awkward k is the padding: k is padded up
+    to whole tiles, so e.g. k = k_tile + 1 pays 2 full tiles of compute and
+    gather."""
+
+    system: str
+    k: int
+    k_tile: int  # effective tile: min(requested, k), like the kernel clamps
+    n_ktiles: int
+    matrix_cycles_per_pass: float  # amortized: nz + colidx + ptr streams
+    gather_cycles_per_col: float  # not amortized: coalesced x fetch + result
+    compute_cycles_per_col: float
+    vmapped_cycles: float  # k single-column passes (the fused model at
+    # k_tile=1, so the comparison isolates amortization, not model drift)
+    fused_cycles: float
+    speedup: float  # vmapped / fused (> 1 once amortization wins)
+    amortization: float  # matrix-traffic ratio vmapped/fused == k / n_ktiles
+    crossover_k: int  # smallest k where fused is strictly cheaper (0: never
+    # within the scanned range — e.g. a compute-bound matrix where the
+    # amortized stream was never the bottleneck)
+    bottleneck: str  # 'compute' | 'memory'
+
+
+def _fused_matmat_cycles(
+    *,
+    matrix_pass: float,
+    gather_col: float,
+    compute_col: float,
+    k: int,
+    k_tile: int,
+    n_tiles: float,
+) -> Tuple[float, int, int, str]:
+    """The fused-kernel cycle count shared by `matmat_spmv_perf` (adapter
+    variants) and `plan_matmat_cycles` (concrete plan geometry, the tuner's
+    objective). Returns (cycles, effective k_tile, n_ktiles, bottleneck).
+
+    Per k-tile pass the kernel streams the matrix side once and the per-
+    column side ``k_tile`` times; padded columns (k rounded up to whole
+    tiles) cost real gather traffic and real VMACs on zeros. The first-tile
+    fill of each pass is exposed, mirroring `spmv_perf`'s prefetch model."""
+    kt = min(int(k_tile), int(k))
+    n_kt = -(-int(k) // kt)
+    k_pad = n_kt * kt
+    dram = n_kt * matrix_pass + k_pad * gather_col
+    compute = k_pad * compute_col
+    fill = n_kt * (matrix_pass + kt * gather_col) / n_tiles
+    cycles = max(compute, dram) + fill
+    return cycles, kt, n_kt, ("compute" if compute >= dram else "memory")
+
+
+def matmat_spmv_perf(
+    sell: SELLMatrix,
+    system: str,
+    *,
+    k: int,
+    k_tile: int,
+    hw: HWConfig = DEFAULT_HW,
+) -> MatmatPerf:
+    """Model Y = A @ X on one adapter system ('pack0' | 'pack64' | 'pack256'):
+    k vmapped single-column passes vs the fused multi-column kernel.
+
+    The coupled 'base' system has no decoupled matrix stream to amortize
+    (indirect loads sit on the critical path per element), so it has no
+    fused variant and is rejected."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if k_tile < 1:
+        raise ValueError(f"k_tile must be >= 1, got {k_tile}")
+    variants = {"pack0": "MLPnc", "pack64": "MLP64", "pack256": "MLP256"}
+    if system not in variants:
+        raise ValueError(
+            f"matmat model covers the pack systems {sorted(variants)}; "
+            f"got {system!r}"
+        )
+    idx_stream = sell_index_stream(sell)
+    nnz_p = sell.nnz_padded
+    _, window = parse_variant(variants[system])
+    epb = hw.elems_per_block
+
+    if window is None:
+        wide = nnz_p
+    else:
+        wide = int(
+            window_unique_counts(idx_stream, window=window, block_rows=epb)
+            .sum()
+        )
+    trace = _issued_block_trace(idx_stream, window, epb)
+    miss = _row_miss_rate(trace, hw.blocks_per_row)
+    cyc_per_access = (
+        hw.wide_access_bytes / hw.channel_bytes_per_cycle
+        + hw.row_miss_penalty_cycles * miss
+    )
+
+    nz_bytes = nnz_p * hw.elem_bytes
+    idx_bytes = nnz_p * hw.index_bytes
+    ptr_bytes = (sell.n_slices + 1) * hw.elem_bytes
+    matrix_pass = (
+        nz_bytes + idx_bytes + ptr_bytes
+    ) / hw.channel_bytes_per_cycle
+    gather_col = (
+        wide * cyc_per_access
+        + sell.n_rows * hw.elem_bytes / hw.channel_bytes_per_cycle
+    )
+    compute_col = nnz_p * hw.vpc_cycles_per_nnz + sell.n_slices * 8.0
+    tile_bytes = hw.l2_bytes / 6
+    n_tiles = max(1.0, (nz_bytes + idx_bytes) / (2 * tile_bytes))
+
+    def cost(kk: int, kt: int) -> float:
+        return _fused_matmat_cycles(
+            matrix_pass=matrix_pass, gather_col=gather_col,
+            compute_col=compute_col, k=kk, k_tile=kt, n_tiles=n_tiles,
+        )[0]
+
+    fused, kt, n_kt, bottleneck = _fused_matmat_cycles(
+        matrix_pass=matrix_pass, gather_col=gather_col,
+        compute_col=compute_col, k=k, k_tile=k_tile, n_tiles=n_tiles,
+    )
+    # The vmapped baseline is the same pipeline at k_tile=1: every column
+    # re-streams the matrix side. Identical decomposition on both sides, so
+    # speedup == 1 exactly at k == 1 and grows with the amortized traffic.
+    vmapped = cost(k, 1)
+
+    crossover = 0
+    for kk in range(1, max(4 * int(k_tile), int(k)) + 1):
+        if cost(kk, k_tile) < cost(kk, 1):
+            crossover = kk
+            break
+
+    return MatmatPerf(
+        system=system,
+        k=int(k),
+        k_tile=kt,
+        n_ktiles=n_kt,
+        matrix_cycles_per_pass=float(matrix_pass),
+        gather_cycles_per_col=float(gather_col),
+        compute_cycles_per_col=float(compute_col),
+        vmapped_cycles=float(vmapped),
+        fused_cycles=float(fused),
+        speedup=float(vmapped / fused),
+        amortization=float(k / n_kt),
+        crossover_k=int(crossover),
+        bottleneck=bottleneck,
+    )
+
+
+def plan_matmat_cycles(
+    stream: np.ndarray,
+    *,
+    n_rows: int,
+    n_slices: int,
+    k: int,
+    k_tile: int,
+    window: int,
+    block_rows: int,
+    hw: HWConfig = DEFAULT_HW,
+) -> float:
+    """Fused-matmat cycle cost of one *concrete plan geometry* — the model
+    objective `core.tune` minimizes over (cols_per_chunk, block_rows,
+    k_tile). Unlike `matmat_spmv_perf`, which evaluates the paper's adapter
+    variants, this measures the coalescer on the plan's own (window,
+    block_rows): `stream` is the width-padded index stream the engine would
+    execute (so wider cols_per_chunk both widens the coalescing window and
+    pays for its padding columns), and a wide x-fetch moves ``block_rows``
+    elements."""
+    if k < 1 or k_tile < 1:
+        raise ValueError(f"k and k_tile must be >= 1, got k={k}, "
+                         f"k_tile={k_tile}")
+    stream = np.asarray(stream)
+    nnz_p = int(stream.size)
+    wide = int(
+        window_unique_counts(stream, window=window, block_rows=block_rows)
+        .sum()
+    )
+    trace = _issued_block_trace(stream, window, block_rows)
+    access_bytes = block_rows * hw.elem_bytes
+    blocks_per_row = max(1, hw.row_bytes // access_bytes)
+    miss = _row_miss_rate(trace, blocks_per_row)
+    cyc_per_access = (
+        access_bytes / hw.channel_bytes_per_cycle
+        + hw.row_miss_penalty_cycles * miss
+    )
+
+    nz_bytes = nnz_p * hw.elem_bytes
+    idx_bytes = nnz_p * hw.index_bytes
+    ptr_bytes = (n_slices + 1) * hw.elem_bytes
+    matrix_pass = (
+        nz_bytes + idx_bytes + ptr_bytes
+    ) / hw.channel_bytes_per_cycle
+    gather_col = (
+        wide * cyc_per_access
+        + n_rows * hw.elem_bytes / hw.channel_bytes_per_cycle
+    )
+    compute_col = nnz_p * hw.vpc_cycles_per_nnz + n_slices * 8.0
+    tile_bytes = hw.l2_bytes / 6
+    n_tiles = max(1.0, (nz_bytes + idx_bytes) / (2 * tile_bytes))
+    cycles, _, _, _ = _fused_matmat_cycles(
+        matrix_pass=matrix_pass, gather_col=gather_col,
+        compute_col=compute_col, k=k, k_tile=k_tile, n_tiles=n_tiles,
+    )
+    return float(cycles)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spots (validated with
-interpret=True on CPU): block-coalesced gather and SELL SpMV."""
+interpret=True on CPU): block-coalesced gather, SELL SpMV, and the fused
+multi-column SELL SpMM."""
 
 from .coalesced_gather import coalesced_gather_pallas  # noqa: F401
-from .sell_spmv import sell_spmv_pallas  # noqa: F401
+from .sell_spmm import sell_spmm_pallas  # noqa: F401
+from .sell_spmv import (  # noqa: F401
+    DevicePlan,
+    build_device_plan,
+    sell_spmv_pallas,
+)

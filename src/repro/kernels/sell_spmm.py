@@ -1,0 +1,172 @@
+"""Fused multi-column SELL SpMM Pallas kernel: one indirect stream, k columns.
+
+The paper's coalescer wins by paying for each wide indirect fetch once and
+reusing it across the window (Sec. II-C). `sell_spmv` applies that *within*
+one right-hand side; this kernel applies the same reuse argument *across* the
+RHS batch: instead of re-running the coalesced x-gather and re-streaming the
+schedule metadata and SELL values once per column (what vmapping the matvec
+kernel does), each warp's wide fetch grabs a ``(block_rows, k_tile)`` tile of
+the dense X and the one-hot extraction becomes a real MXU matmul
+
+    onehot (window, block_rows) @ X_block (block_rows, k_tile)
+        -> gathered (window, k_tile)
+
+so the tags / elem_warp / elem_offset stream and the SELL values are read
+**once per k_tile columns** instead of once per column — HBM SpMV designs
+(Serpens) and the SSSR sparse-dense argument get their bandwidth efficiency
+from exactly this amortization. A fourth grid dimension tiles wide RHS
+batches into ``k_tile``-column passes; ``k_tile`` is clamped to k so narrow
+batches never pay padding compute.
+
+Grid: ``(n_slices, n_ktiles, n_chunks, max_warps)`` — for a fixed (slice,
+k-tile) output block the (chunk, warp) dimensions iterate innermost, so the
+``(H, k_tile)`` accumulator stays resident exactly like the matvec kernel's
+``(H,)`` accumulator does.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coalescer import BlockSchedule
+
+from .sell_spmv import DevicePlan, resolve_device_plan
+
+
+def _kernel(
+    tags_ref,  # scalar-prefetch (n_windows, max_warps)
+    elem_warp_ref,  # (1, 1, window)
+    elem_offset_ref,  # (1, 1, window)
+    values_ref,  # (1, 1, C, H)
+    x_block_ref,  # (1, block_rows, k_tile) — coalesced wide fetch of X
+    out_ref,  # (1, H, k_tile)
+    *,
+    block_rows: int,
+    window: int,
+    cols_per_chunk: int,
+    slice_height: int,
+    k_tile: int,
+):
+    c = pl.program_id(2)
+    t = pl.program_id(3)
+
+    @pl.when((c == 0) & (t == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ew = elem_warp_ref[0, 0, :]
+    eo = elem_offset_ref[0, 0, :]
+    hit = ew == t
+    rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
+    onehot = (hit[:, None] & (eo[:, None] == rows)).astype(x_block_ref.dtype)
+    # Extraction across the whole RHS tile: response-splitter + element-packer
+    # as one MXU matmul — the wide fetch is amortized over k_tile columns.
+    gathered = jax.lax.dot(
+        onehot, x_block_ref[0], preferred_element_type=out_ref.dtype
+    )  # (window, k_tile)
+    g = gathered.reshape(cols_per_chunk, slice_height, k_tile)
+    # VPC VMAC, broadcast over the RHS tile: multiply by nonzeros and reduce
+    # over the chunk's columns.
+    out_ref[0] += jnp.sum(values_ref[0, 0][:, :, None] * g, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cols_per_chunk", "block_rows", "k_tile", "max_warps", "interpret",
+    ),
+)
+def sell_spmm_pallas(
+    colidx: jnp.ndarray | None,  # (n_slices, W, H) int32, or None with a plan
+    values: jnp.ndarray,  # (n_slices, W, H) (W % cols_per_chunk == 0)
+    X: jnp.ndarray,  # (n_cols, k)
+    *,
+    cols_per_chunk: int = 8,
+    block_rows: int = 8,
+    k_tile: int = 8,
+    max_warps: int | None = None,
+    schedule: BlockSchedule | None = None,
+    plan: DevicePlan | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns Y = A @ X, Y: (n_slices * H, k). Semantics: ref.sell_spmm_ref
+    (bit-compatible per column with sell_spmv up to summation order).
+
+    One pass over the schedule metadata and the SELL values serves ``k_tile``
+    RHS columns; ``k`` is padded up to a multiple of the (clamped) tile with
+    zero columns and the padding is sliced off before returning. The same
+    prebuilt `schedule`/`plan` objects the matvec kernel takes are accepted —
+    `core.engine.SpMVEngine` shares one `DevicePlan` between both kernels —
+    and with either, `colidx` may be None (it never touches the dispatch
+    path)."""
+    n_slices, W, H = values.shape
+    if X.ndim != 2:
+        raise ValueError(f"sell_spmm expects X of shape (n_cols, k), got "
+                         f"{X.shape}")
+    if W % cols_per_chunk != 0:
+        raise ValueError(
+            f"sell_spmm consumes SELL in chunks of {cols_per_chunk} columns "
+            f"but the padded width is {W}; plan width-aware — pad W to a "
+            f"multiple of cols_per_chunk (core.engine.SpMVEngine with "
+            f"backend='pallas' does this at planning time)"
+        )
+    if k_tile < 1:
+        raise ValueError(f"k_tile must be >= 1, got {k_tile}")
+    k = int(X.shape[1])
+    if k == 0:
+        return jnp.zeros((n_slices * H, 0), values.dtype)
+    n_chunks = W // cols_per_chunk
+    window = cols_per_chunk * H
+    dplan = resolve_device_plan(
+        colidx, n_slices=n_slices, W=W, slice_height=H,
+        cols_per_chunk=cols_per_chunk, block_rows=block_rows,
+        max_warps=max_warps, schedule=schedule, plan=plan,
+    )
+    vals = values.reshape(n_slices, n_chunks, cols_per_chunk, H)
+
+    # Clamp the tile to k (a 1-column batch must not pay k_tile columns of
+    # MXU work), then pad k up to a whole number of tiles with zero columns.
+    kt = min(int(k_tile), k)
+    n_ktiles = -(-k // kt)
+    k_pad = n_ktiles * kt
+    R = X.shape[0]
+    n_blocks = -(-R // block_rows)
+    X_p = jnp.pad(
+        X, ((0, n_blocks * block_rows - R), (0, k_pad - k))
+    ).reshape(n_blocks, block_rows, k_pad)
+
+    def tag_of(s, q, c, t, tags):
+        return (tags[s * n_chunks + c, t], 0, q)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_slices, n_ktiles, n_chunks, dplan.max_warps),
+        in_specs=[
+            pl.BlockSpec((1, 1, window), lambda s, q, c, t, tags: (s, c, 0)),
+            pl.BlockSpec((1, 1, window), lambda s, q, c, t, tags: (s, c, 0)),
+            pl.BlockSpec(
+                (1, 1, cols_per_chunk, H),
+                lambda s, q, c, t, tags: (s, c, 0, 0),
+            ),
+            pl.BlockSpec((1, block_rows, kt), tag_of),
+        ],
+        out_specs=pl.BlockSpec((1, H, kt), lambda s, q, c, t, tags: (s, 0, q)),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            block_rows=block_rows,
+            window=window,
+            cols_per_chunk=cols_per_chunk,
+            slice_height=H,
+            k_tile=kt,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_slices, H, k_pad), values.dtype),
+        interpret=interpret,
+    )(dplan.tags, dplan.elem_warp, dplan.elem_offset, vals, X_p)
+    return out.reshape(n_slices * H, k_pad)[:, :k]

@@ -10,9 +10,20 @@ Layout: padded SELL (n_slices, W, H) with H = slice height (32), W padded to a
 multiple of `cols_per_chunk`. One *window* of the indirect stream = one
 (slice, chunk) = cols_per_chunk * H indices, matching the paper's windowed
 coalescing of the column-index stream.
+
+`DevicePlan` is the kernel-ready, device-resident form of a `BlockSchedule`:
+the SENTINEL-sanitized tag matrix plus the per-(slice, chunk) reshapes of
+`elem_warp`/`elem_offset`. Building it per call would re-trace that
+preprocessing into every jit (and re-upload it per trace), so plan-owning
+callers (`core.engine.SpMVEngine`) build it **once** and share it between the
+matvec kernel here and the fused matmat kernel (`kernels.sell_spmm`). With a
+prebuilt plan the column-index array itself is dead weight — the schedule
+already encodes every gather — so `colidx` may be None and stays off the
+transfer path entirely.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -21,6 +32,170 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.coalescer import BlockSchedule, SENTINEL, resolve_schedule
+
+
+@dataclasses.dataclass
+class DevicePlan:
+    """Kernel-ready coalescer plan: what both SELL kernels actually consume.
+
+    tags:        (n_windows, max_warps) int32 — per-window wide-block ids with
+                 SENTINEL slots remapped to 0 (a SENTINEL tag is never hit by
+                 any `elem_warp`, so block 0 is a safe dummy fetch target and
+                 the scalar-prefetch index map needs no branch).
+    elem_warp:   (n_slices, n_chunks, window) int32 — `BlockSchedule.elem_warp`
+                 reshaped to the (slice, chunk) grid the kernels iterate.
+    elem_offset: (n_slices, n_chunks, window) int32 — likewise.
+
+    The geometry ints ride in the pytree aux data, so a plan-carrying jit
+    call specializes on them exactly like on static arguments.
+    """
+
+    tags: jnp.ndarray
+    elem_warp: jnp.ndarray
+    elem_offset: jnp.ndarray
+    window: int
+    block_rows: int
+    cols_per_chunk: int
+    slice_height: int
+    n_slices: int
+    n_chunks: int
+
+    @property
+    def max_warps(self) -> int:
+        return int(self.tags.shape[1])
+
+
+jax.tree_util.register_pytree_node(
+    DevicePlan,
+    lambda p: (
+        (p.tags, p.elem_warp, p.elem_offset),
+        (p.window, p.block_rows, p.cols_per_chunk, p.slice_height,
+         p.n_slices, p.n_chunks),
+    ),
+    lambda aux, children: DevicePlan(*children, *aux),
+)
+
+
+def build_device_plan(
+    schedule: BlockSchedule,
+    *,
+    n_slices: int,
+    cols_per_chunk: int,
+    slice_height: int,
+) -> DevicePlan:
+    """Lower a `BlockSchedule` to the device-resident `DevicePlan` both SELL
+    kernels consume. Validates that the schedule was built for exactly this
+    (slice, chunk) geometry — a plan for different geometry would silently
+    gather the wrong elements."""
+    window = int(cols_per_chunk) * int(slice_height)
+    if schedule.window != window:
+        raise ValueError(
+            f"schedule was planned for window={schedule.window}, but "
+            f"cols_per_chunk={cols_per_chunk} x slice_height={slice_height} "
+            f"needs window={window}"
+        )
+    if n_slices < 1 or schedule.n_windows % n_slices != 0:
+        raise ValueError(
+            f"schedule covers {schedule.n_windows} windows, which does not "
+            f"tile {n_slices} slices"
+        )
+    n_chunks = schedule.n_windows // n_slices
+    return DevicePlan(
+        tags=jnp.where(schedule.tags == SENTINEL, 0, schedule.tags),
+        elem_warp=jnp.asarray(schedule.elem_warp).reshape(
+            n_slices, n_chunks, window
+        ),
+        elem_offset=jnp.asarray(schedule.elem_offset).reshape(
+            n_slices, n_chunks, window
+        ),
+        window=window,
+        block_rows=int(schedule.block_rows),
+        cols_per_chunk=int(cols_per_chunk),
+        slice_height=int(slice_height),
+        n_slices=int(n_slices),
+        n_chunks=int(n_chunks),
+    )
+
+
+def resolve_device_plan(
+    colidx: jnp.ndarray | None,
+    *,
+    n_slices: int,
+    W: int,
+    slice_height: int,
+    cols_per_chunk: int,
+    block_rows: int,
+    max_warps: int | None,
+    schedule: BlockSchedule | None,
+    plan: DevicePlan | None,
+) -> DevicePlan:
+    """Shared plan resolution for both SELL kernels: a prebuilt `plan` wins
+    (validated against the call geometry), else a prebuilt `schedule` is
+    lowered, else the plan is built from `colidx` (which is only then
+    required). The geometry of record is the *values* array's — a `colidx`
+    that disagrees with it (e.g. an unpadded index array next to
+    width-padded values) must raise, not plan a schedule that indexes out
+    of the grid."""
+    n_chunks = W // cols_per_chunk
+    if colidx is not None and tuple(colidx.shape) != (
+        n_slices, W, slice_height
+    ):
+        raise ValueError(
+            f"colidx shape {tuple(colidx.shape)} disagrees with the values "
+            f"geometry ({n_slices}, {W}, {slice_height}); pad colidx and "
+            f"values together (core.runtime.pad_width)"
+        )
+    if plan is not None:
+        if (
+            plan.n_slices != n_slices
+            or plan.n_chunks != n_chunks
+            or plan.slice_height != slice_height
+            or plan.cols_per_chunk != cols_per_chunk
+        ):
+            raise ValueError(
+                f"device plan was built for (n_slices={plan.n_slices}, "
+                f"n_chunks={plan.n_chunks}, cols_per_chunk="
+                f"{plan.cols_per_chunk}, slice_height={plan.slice_height}), "
+                f"call expects (n_slices={n_slices}, n_chunks={n_chunks}, "
+                f"cols_per_chunk={cols_per_chunk}, "
+                f"slice_height={slice_height})"
+            )
+        if plan.block_rows != block_rows:
+            raise ValueError(
+                f"device plan was built for block_rows={plan.block_rows}, "
+                f"call expects block_rows={block_rows}"
+            )
+        return plan
+    if schedule is None:
+        if colidx is None:
+            raise ValueError(
+                "colidx is required to build a plan; pass schedule= or "
+                "plan= to run without the column-index array"
+            )
+        schedule, _ = resolve_schedule(
+            colidx.reshape(-1),
+            window=cols_per_chunk * slice_height,
+            block_rows=block_rows,
+            max_warps=max_warps,
+        )
+    else:
+        expected = n_slices * n_chunks
+        if schedule.n_windows != expected:
+            raise ValueError(
+                f"schedule covers {schedule.n_windows} windows but this "
+                f"geometry has {expected}"
+            )
+        if schedule.block_rows != block_rows:
+            raise ValueError(
+                f"schedule was planned for block_rows={schedule.block_rows}, "
+                f"call expects block_rows={block_rows}"
+            )
+    return build_device_plan(
+        schedule,
+        n_slices=n_slices,
+        cols_per_chunk=cols_per_chunk,
+        slice_height=slice_height,
+    )
 
 
 def _kernel(
@@ -62,21 +237,25 @@ def _kernel(
     static_argnames=("cols_per_chunk", "block_rows", "max_warps", "interpret"),
 )
 def sell_spmv_pallas(
-    colidx: jnp.ndarray,  # (n_slices, W, H) int32 (W % cols_per_chunk == 0)
-    values: jnp.ndarray,  # (n_slices, W, H)
+    colidx: jnp.ndarray | None,  # (n_slices, W, H) int32, or None with a plan
+    values: jnp.ndarray,  # (n_slices, W, H) (W % cols_per_chunk == 0)
     x: jnp.ndarray,  # (n_cols,)
     *,
     cols_per_chunk: int = 8,
     block_rows: int = 8,
     max_warps: int | None = None,
     schedule: BlockSchedule | None = None,
+    plan: DevicePlan | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns y = A @ x, y: (n_slices * H,). Semantics: ref.sell_spmv_ref.
 
-    A prebuilt `schedule` over the storage-order index stream (e.g. from
-    core.engine.cached_block_schedule) skips per-call plan construction."""
-    n_slices, W, H = colidx.shape
+    A prebuilt `schedule` (from core.engine.cached_block_schedule) or — better
+    for repeat execution — a prebuilt `plan` (`build_device_plan`) skips
+    per-call plan construction; with either, `colidx` may be None (the plan
+    already encodes the whole indirect stream, so the index array never
+    touches the dispatch path)."""
+    n_slices, W, H = values.shape
     if W % cols_per_chunk != 0:
         raise ValueError(
             f"sell_spmv consumes SELL in chunks of {cols_per_chunk} columns "
@@ -87,14 +266,11 @@ def sell_spmv_pallas(
     n_chunks = W // cols_per_chunk
     window = cols_per_chunk * H
     # The indirect stream in storage order: slice-by-slice, column-major.
-    sched, max_warps = resolve_schedule(
-        colidx.reshape(-1), window=window, block_rows=block_rows,
-        max_warps=max_warps, schedule=schedule,
+    dplan = resolve_device_plan(
+        colidx, n_slices=n_slices, W=W, slice_height=H,
+        cols_per_chunk=cols_per_chunk, block_rows=block_rows,
+        max_warps=max_warps, schedule=schedule, plan=plan,
     )
-    assert sched.n_windows == n_slices * n_chunks
-    tags = jnp.where(sched.tags == SENTINEL, 0, sched.tags)
-    ew = sched.elem_warp.reshape(n_slices, n_chunks, window)
-    eo = sched.elem_offset.reshape(n_slices, n_chunks, window)
     vals = values.reshape(n_slices, n_chunks, cols_per_chunk, H)
 
     R = x.shape[0]
@@ -106,7 +282,7 @@ def sell_spmv_pallas(
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n_slices, n_chunks, max_warps),
+        grid=(n_slices, n_chunks, dplan.max_warps),
         in_specs=[
             pl.BlockSpec((1, 1, window), lambda s, c, t, tags: (s, c, 0)),
             pl.BlockSpec((1, 1, window), lambda s, c, t, tags: (s, c, 0)),
@@ -128,5 +304,5 @@ def sell_spmv_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_slices, H), values.dtype),
         interpret=interpret,
-    )(tags, ew, eo, vals, x_p)
+    )(dplan.tags, dplan.elem_warp, dplan.elem_offset, vals, x_p)
     return out.reshape(-1)

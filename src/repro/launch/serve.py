@@ -80,6 +80,31 @@ def serve_spmv(args) -> None:
 
     gen = _SPMV_MATRICES[args.spmv](args.spmv_rows)
     csr = gen(np.random.default_rng(args.seed))
+    # Plan knobs: CLI defaults, unless the autotuner picks them. The tuned
+    # cols_per_chunk implies the pallas window, so an explicit --window is
+    # dropped in favor of the derived one when tuning.
+    knobs = dict(window=args.window, block_rows=args.block_rows)
+    if args.tune:
+        from repro.core.tune import autotune
+
+        t0 = time.time()
+        tuned = autotune(
+            csr, k=args.batch, backend=args.backend, mode=args.tune,
+            cache_dir=args.tune_cache,
+        )
+        print(
+            f"spmv-tune: cols_per_chunk={tuned.cols_per_chunk} "
+            f"block_rows={tuned.block_rows} k_tile={tuned.k_tile} "
+            f"(mode={tuned.mode}, source={tuned.source}, "
+            f"trials={tuned.trials}, cost={tuned.cost:.3g}, "
+            f"{time.time() - t0:.3f}s)"
+        )
+        knobs = dict(
+            window=None,
+            block_rows=tuned.block_rows,
+            cols_per_chunk=tuned.cols_per_chunk,
+            k_tile=tuned.k_tile,
+        )
     t0 = time.time()
     if args.mesh:
         from repro.core.dist import ShardedSpMVEngine
@@ -89,12 +114,13 @@ def serve_spmv(args) -> None:
         engine = ShardedSpMVEngine(
             csr,
             mesh=mesh,
-            window=args.window,
-            block_rows=args.block_rows,
             backend=args.backend,
             cache_dir=args.schedule_cache,
+            **knobs,
         )
-        rep = engine.plan_report()  # forces every shard's schedule build
+        # Forces every shard's schedule build; k= folds the matmat
+        # amortization prediction into the same report pass.
+        rep = engine.plan_report(k=args.batch if args.batch > 1 else None)
         plan_s = time.time() - t0
         cached = [s["schedule_cached"] for s in rep["shards"]]
         print(
@@ -124,12 +150,12 @@ def serve_spmv(args) -> None:
     else:
         engine = get_engine(
             csr,
-            window=args.window,
-            block_rows=args.block_rows,
             backend=args.backend,
             cache_dir=args.schedule_cache,
+            **knobs,
         )
-        rep = engine.plan_report()  # forces the (lazy) schedule build
+        # Forces the (lazy) schedule build; k= folds the matmat prediction in.
+        rep = engine.plan_report(k=args.batch if args.batch > 1 else None)
         plan_s = time.time() - t0
         print(
             f"spmv-serve: {args.spmv} {rep['n_rows']}x{rep['n_cols']} "
@@ -139,12 +165,26 @@ def serve_spmv(args) -> None:
         print(
             f"  backend: {rep['backend']} -> {rep['backend_resolved']} "
             f"(cols_per_chunk={rep['cols_per_chunk']}, "
-            f"plan_width={rep['plan_width']})"
+            f"plan_width={rep['plan_width']}, "
+            f"matmat={rep['matmat_mode']}, k_tile={rep['k_tile']})"
         )
         print(
             f"  plan: window={rep['window']} block_rows={rep['block_rows']} "
             f"wide_accesses={rep['wide_accesses']} "
             f"coalesce_rate={rep['coalesce_rate']:.2f}"
+        )
+    if args.batch > 1:
+        # The fused-matmat amortization the model predicts for this batch
+        # width (measured fused-vs-vmapped lives in benchmarks/run.py
+        # --matmat; this is the serving-side prediction surface).
+        mm = rep["matmat"]
+        pred = mm["perf"]["pack256"]
+        print(
+            f"  matmat: k_tile={mm['k_tile']} mode={mm['mode']} — model "
+            f"predicts x{pred['speedup']:.3f} fused vs vmapped at "
+            f"k={args.batch} (matrix stream amortized "
+            f"x{pred['amortization']:.1f}, crossover k="
+            f"{pred['crossover_k']})"
         )
     stream_cfg = parse_stream_spec(args.stream) if args.stream else None
     streamer = None
@@ -281,6 +321,20 @@ def main() -> None:
         "(core.runtime.StreamingExecutor): 'depth=D,microbatch=B' (either "
         "key optional; defaults depth=2, microbatch=32) — micro-batches of "
         "B RHS columns, at most D staged-or-computing at once",
+    )
+    ap.add_argument(
+        "--tune", nargs="?", const="model", choices=("model", "measure"),
+        default=None,
+        help="autotune (cols_per_chunk, block_rows, k_tile) for this matrix "
+        "and batch width before serving (core.tune.autotune): 'model' "
+        "scores candidates with the fused-matmat cycle model, 'measure' "
+        "times real matmats; winners persist content-addressed (see "
+        "--tune-cache) so repeat serves run zero trials",
+    )
+    ap.add_argument(
+        "--tune-cache", default=None, metavar="DIR",
+        help="persistent tuner cache directory (default: $REPRO_TUNE_CACHE, "
+        "falling back to the schedule cache directory)",
     )
     ap.add_argument(
         "--schedule-cache", default=None, metavar="DIR",

@@ -8,6 +8,8 @@ from repro.core.perfmodel import (
     DEFAULT_HW,
     adapter_area_model,
     indirect_stream_perf,
+    matmat_spmv_perf,
+    plan_matmat_cycles,
     spmv_perf,
     streaming_spmv_perf,
 )
@@ -134,6 +136,56 @@ def test_streaming_bottleneck_identifies_transfer_bound_shapes():
     assert one.speedup == 1.0  # nothing to overlap with a single micro-batch
     deep = streaming_spmv_perf(BANDED, "pack256", k=32, microbatch=8, depth=2)
     assert deep.bottleneck == "compute"
+
+
+def test_matmat_reuse_term_invariants():
+    """The fused-matmat model: speedup is exactly 1 at k=1 (the clamped tile
+    degenerates to the vmapped schedule), grows with the amortized matrix
+    traffic at whole-tile k, and the crossover lands at small k."""
+    for sell in (BANDED, RANDOM):
+        p1 = matmat_spmv_perf(sell, "pack256", k=1, k_tile=8)
+        assert p1.speedup == pytest.approx(1.0)
+        assert p1.k_tile == 1 and p1.n_ktiles == 1  # clamped to k
+        p8 = matmat_spmv_perf(sell, "pack256", k=8, k_tile=8)
+        p64 = matmat_spmv_perf(sell, "pack256", k=64, k_tile=8)
+        assert p64.speedup >= p8.speedup >= 1.0
+        assert p64.speedup > 1.0  # amortization must actually predict a win
+        assert p64.amortization == pytest.approx(8.0)  # k / n_ktiles
+        assert 1 <= p64.crossover_k <= 8
+        # fused cycle count is monotone in k (more columns, more work)
+        assert p64.fused_cycles > p8.fused_cycles > p1.fused_cycles
+
+
+def test_matmat_padding_penalty_at_awkward_k():
+    """k = k_tile + 1 pays two full tiles of gather + compute; the model
+    must show the dip relative to the whole-tile neighbours."""
+    awkward = matmat_spmv_perf(BANDED, "pack256", k=9, k_tile=8)
+    whole = matmat_spmv_perf(BANDED, "pack256", k=16, k_tile=8)
+    assert awkward.n_ktiles == 2 and whole.n_ktiles == 2
+    assert awkward.speedup < whole.speedup
+
+
+def test_matmat_model_rejects_base_and_bad_args():
+    with pytest.raises(ValueError, match="pack"):
+        matmat_spmv_perf(BANDED, "base", k=8, k_tile=8)
+    with pytest.raises(ValueError, match="k must be"):
+        matmat_spmv_perf(BANDED, "pack256", k=0, k_tile=8)
+    with pytest.raises(ValueError, match="k_tile"):
+        matmat_spmv_perf(BANDED, "pack256", k=8, k_tile=0)
+
+
+def test_plan_matmat_cycles_prefers_coalescing_friendly_geometry():
+    """The tuner's objective responds to the plan geometry: on a banded
+    stream a wider coalescing window (more reuse per wide fetch) must not
+    cost more cycles, and a larger k_tile amortizes the matrix stream."""
+    s = sell_index_stream(BANDED)
+    kw = dict(n_rows=BANDED.n_rows, n_slices=BANDED.n_slices, k=64)
+    narrow = plan_matmat_cycles(s, k_tile=8, window=64, block_rows=8, **kw)
+    wide = plan_matmat_cycles(s, k_tile=8, window=256, block_rows=8, **kw)
+    assert wide <= narrow
+    tiled = plan_matmat_cycles(s, k_tile=16, window=256, block_rows=8, **kw)
+    untiled = plan_matmat_cycles(s, k_tile=1, window=256, block_rows=8, **kw)
+    assert tiled <= untiled
 
 
 def test_area_model_matches_paper_points():
