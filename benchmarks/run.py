@@ -21,6 +21,7 @@ PARITY_TOL = 1e-5
 SMOKE_JSON = "BENCH_smoke.json"
 STREAM_JSON = "BENCH_stream.json"
 MATMAT_JSON = "BENCH_matmat.json"
+SOLVE_JSON = "BENCH_solve.json"
 # Streamed serving must not be slower than the synchronous loop. Gated on
 # the median of paired per-trial ratios (drift-cancelling); the margin
 # absorbs residual CPU jitter — a real pipelining regression blows well
@@ -457,6 +458,133 @@ def _matmat_smoke() -> dict:
     }
 
 
+def _solve_smoke() -> dict:
+    """Iterative solvers over the plan-once engine: the execute-many side
+    of the paper's amortization story. Two matrix families per solver —
+    CG on SPD-ified powerlaw (webbase-1M) + banded (af-shell10) sparsity,
+    PageRank on the webbase-1M and wiki-talk powerlaw adjacencies — each
+    solved cold (counting schedule builds) then warm (timed). Emits
+    iterations/s rows and returns the gate inputs: residual correctness,
+    probability-distribution checks, and the plan-reuse counters proving
+    exactly one schedule build per cold solve and zero when warm."""
+    import numpy as np
+
+    from repro.core import cg, pagerank
+    from repro.core.engine import clear_engine_cache, clear_schedule_cache, \
+        schedule_cache_stats
+    from repro.core.matrices import make_spd, suite_specs
+    from .common import emit, timed
+
+    specs = {s.name: s for s in suite_specs("ci")}
+    out: dict = {"cg": {}, "pagerank": {}}
+
+    # two sparsity families: powerlaw (webbase-1M) and banded (pwtk —
+    # af-shell10's 1.5M-nnz ci instance would spend minutes in the one-time
+    # plan build for no extra gate coverage)
+    cg_cases = {
+        "webbase-1M": make_spd(specs["webbase-1M"].gen(seed=0)),
+        "pwtk": make_spd(specs["pwtk"].gen(seed=1)),
+    }
+    for name, csr in cg_cases.items():
+        clear_engine_cache()
+        clear_schedule_cache()
+        b = np.random.default_rng(7).standard_normal(
+            csr.n_rows
+        ).astype(np.float32)
+        cold = cg(csr, b, tol=1e-6, backend="reference")
+        builds_cold = cold.schedule_builds
+        warm, us = timed(
+            lambda: cg(csr, b, tol=1e-6, backend="reference"), repeats=3
+        )
+        iters_per_s = warm.iterations / (us / 1e6) if us > 0 else 0.0
+        # true residual recheck, independent of the solver's own counter
+        dense_dot = csr.todense().astype(np.float64) @ np.asarray(
+            warm.x, np.float64
+        )
+        true_res = float(
+            np.linalg.norm(b - dense_dot) / np.linalg.norm(b)
+        )
+        emit(
+            f"solve/cg/{name}", us,
+            f"iters={warm.iterations};iters_per_s={iters_per_s:.1f};"
+            f"relres={true_res:.2e};builds_cold={builds_cold};"
+            f"builds_warm={warm.schedule_builds}",
+        )
+        out["cg"][name] = {
+            "n": csr.n_rows,
+            "nnz": int(csr.data.size),
+            "iterations": warm.iterations,
+            "iters_per_s": round(iters_per_s, 1),
+            "converged": bool(warm.converged),
+            "residual": warm.residual,
+            "true_relres": true_res,
+            "schedule_builds_cold": builds_cold,
+            "schedule_builds_warm": warm.schedule_builds,
+        }
+
+    for name in ("webbase-1M", "wiki-talk"):
+        clear_engine_cache()
+        clear_schedule_cache()
+        adj = specs[name].gen(seed=2)
+        cold = pagerank(adj, tol=1e-7, backend="reference")
+        builds_cold = cold.schedule_builds
+        warm, us = timed(
+            lambda: pagerank(adj, tol=1e-7, backend="reference"), repeats=3
+        )
+        iters_per_s = warm.iterations / (us / 1e6) if us > 0 else 0.0
+        x = np.asarray(warm.x, np.float64)
+        emit(
+            f"solve/pagerank/{name}", us,
+            f"iters={warm.iterations};iters_per_s={iters_per_s:.1f};"
+            f"delta={warm.residual:.2e};builds_cold={builds_cold};"
+            f"builds_warm={warm.schedule_builds}",
+        )
+        out["pagerank"][name] = {
+            "n": adj.n_rows,
+            "nnz": int(adj.data.size),
+            "iterations": warm.iterations,
+            "iters_per_s": round(iters_per_s, 1),
+            "converged": bool(warm.converged),
+            "l1_delta": warm.residual,
+            "min_x": float(x.min()),
+            "sum_x": float(x.sum()),
+            "schedule_builds_cold": builds_cold,
+            "schedule_builds_warm": warm.schedule_builds,
+        }
+    out["schedule_cache"] = schedule_cache_stats()
+    return out
+
+
+def _solve_gate(solve: dict) -> dict:
+    """Solver failures, empty when clean: CG must converge with the
+    independently recomputed relative residual under 10x its tolerance;
+    PageRank must converge to a probability distribution; every cold solve
+    builds exactly one schedule and every warm solve builds none. (NaN
+    comparisons are written to fail, as in the other gates.)"""
+    bad = {}
+    for name, row in solve["cg"].items():
+        if not row["converged"]:
+            bad[f"solve-cg-{name}-converged"] = row["residual"]
+        if not (row["true_relres"] <= 1e-5):
+            bad[f"solve-cg-{name}-residual"] = row["true_relres"]
+    for name, row in solve["pagerank"].items():
+        if not row["converged"]:
+            bad[f"solve-pagerank-{name}-converged"] = row["l1_delta"]
+        if not (row["min_x"] >= -1e-9):
+            bad[f"solve-pagerank-{name}-nonneg"] = row["min_x"]
+        if not (abs(row["sum_x"] - 1.0) <= 1e-5):
+            bad[f"solve-pagerank-{name}-mass"] = row["sum_x"]
+    for solver in ("cg", "pagerank"):
+        for name, row in solve[solver].items():
+            if row["schedule_builds_cold"] != 1:
+                bad[f"solve-{solver}-{name}-plan-cold"] = \
+                    row["schedule_builds_cold"]
+            if row["schedule_builds_warm"] != 0:
+                bad[f"solve-{solver}-{name}-plan-warm"] = \
+                    row["schedule_builds_warm"]
+    return bad
+
+
 def _matmat_gate(matmat: dict) -> dict:
     """Fused-matmat failures, empty when clean: parity within PARITY_TOL at
     every k, fused >= vmapped throughput at k >= k_tile within the jitter
@@ -514,15 +642,23 @@ def main() -> None:
         "fused>=vmapped throughput at k>=k_tile + the perf-model "
         "amortization trend (implies ci scale)",
     )
+    ap.add_argument(
+        "--solve", action="store_true",
+        help="iterative-solver rows (CG + PageRank over two matrix "
+        "families) through core.solvers; writes BENCH_solve.json and gates "
+        "residual correctness, the PageRank probability distribution, and "
+        "plan reuse (exactly one schedule build per cold solve, zero warm; "
+        "implies ci scale)",
+    )
     args = ap.parse_args()
-    if args.smoke or args.stream or args.matmat:
+    if args.smoke or args.stream or args.matmat or args.solve:
         os.environ["BENCH_SCALE"] = "ci"  # before .common reads it
 
     t0 = time.time()
     from . import common, engine_cache, fig5_spmv
 
     print("name,us_per_call,derived")
-    if args.smoke or args.stream or args.matmat:
+    if args.smoke or args.stream or args.matmat or args.solve:
         parity: dict = {}
         sharded = None
         if args.smoke:
@@ -533,6 +669,7 @@ def main() -> None:
             sharded = _sharded_smoke()
         stream = _streaming_smoke() if args.stream else None
         matmat = _matmat_smoke() if args.matmat else None
+        solve = _solve_smoke() if args.solve else None
         total_s = time.time() - t0
         bad = {k: v for k, v in parity.items() if not (v <= PARITY_TOL)}
         if args.smoke:
@@ -591,6 +728,22 @@ def main() -> None:
                 f"k={matmat['throughput']['k']})"
             )
             bad.update(_matmat_gate(matmat))
+        if solve is not None:
+            solve_payload = {
+                "scale": os.environ.get("BENCH_SCALE", "ci"),
+                "solve": solve,
+                "rows": [
+                    r for r in common.rows() if r["name"].startswith("solve/")
+                ],
+            }
+            with open(SOLVE_JSON, "w") as f:
+                json.dump(solve_payload, f, indent=2)
+            print(
+                f"# wrote {SOLVE_JSON} "
+                f"({len(solve['cg'])} cg + {len(solve['pagerank'])} "
+                f"pagerank cases)"
+            )
+            bad.update(_solve_gate(solve))
         print(f"# total {total_s:.1f}s (smoke)")
         if bad:
             print(

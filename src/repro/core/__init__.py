@@ -71,4 +71,12 @@ from .tune import (  # noqa: F401
     get_tuned_engine,
     tune_stats,
 )
+from .solvers import (  # noqa: F401
+    SolveResult,
+    cg,
+    jacobi,
+    pagerank,
+    power_iteration,
+    transition_matrix,
+)
 from .spmv import spmv_csr, spmv_sell, spmv_sell_coalesced  # noqa: F401

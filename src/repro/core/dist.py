@@ -253,6 +253,30 @@ class ShardedSpMVEngine:
         # dispatched async; the host gather below synchronizes
         return np.concatenate([np.asarray(p) for p in parts])
 
+    def matvec_parts(self, x: jnp.ndarray):
+        """Per-shard matvec without the host gather: returns a list of
+        ``(part, placed_x, (lo, hi))`` per row shard, where ``part`` is the
+        shard's slice of ``A @ x`` (dispatched async on the shard's mesh
+        device), ``placed_x`` is the replicated input committed to that
+        device, and ``(lo, hi)`` the shard's global row range. Solver loops
+        (core.solvers) use this to reduce dot products over the mesh
+        ``data`` axis: each shard computes ``<x[lo:hi], part>`` on its own
+        device and only the scalar partials meet on the host."""
+        x = jnp.asarray(x)
+        if x.ndim != 1 or x.shape[0] != self.sell.n_cols:
+            raise ValueError(
+                f"matvec_parts expects x of shape ({self.sell.n_cols},), got "
+                f"{x.shape}"
+            )
+        placed: Dict[int, jnp.ndarray] = {}  # one x transfer per device row
+        out = []
+        for i, eng in enumerate(self.engines):
+            d = self._shard_device_row(i)
+            if d not in placed:
+                placed[d] = jax.device_put(x, self.devices[d, 0])
+            out.append((eng.matvec(placed[d]), placed[d], self.row_ranges[i]))
+        return out
+
     def matmat(self, X: jnp.ndarray) -> np.ndarray:
         """Y = A @ X with row shards on the ``data`` axis and RHS column
         groups on the ``model`` axis. Every (shard, column-group) block is

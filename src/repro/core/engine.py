@@ -730,6 +730,15 @@ class SpMVEngine:
         mv, _ = self._ensure_compiled()
         return mv(x)
 
+    def device_matvec(self):
+        """The jitted matvec itself (not its result) — traceable inside
+        `jax.lax.while_loop` bodies. The hoisted `DevicePlan`/schedule
+        arrays are closure constants of this function, so a solver loop
+        carries the plan as loop-invariant state with zero host round-trips
+        per iteration (core.solvers builds on this)."""
+        mv, _ = self._ensure_compiled()
+        return mv
+
     def matmat(self, X: jnp.ndarray) -> jnp.ndarray:
         """Y = A @ X for X: (n_cols, k) — one schedule shared by all k.
 

@@ -17,7 +17,21 @@ import numpy as np
 
 from .formats import CSRMatrix, coo_to_csr
 
-Gen = Callable[[np.random.Generator], CSRMatrix]
+# Every generator returned below is callable as `gen(rng)` (explicit
+# numpy Generator) or `gen(seed=7)` / `gen()` (deterministic from the seed,
+# default 0) — solver/property tests need instances that are reproducible
+# without threading global RNG state through the call site.
+Gen = Callable[..., CSRMatrix]
+
+
+def _resolve_rng(rng, seed: int) -> np.random.Generator:
+    if rng is None:
+        return np.random.default_rng(seed)
+    if not isinstance(rng, np.random.Generator):
+        raise TypeError(
+            f"rng must be a numpy Generator or None, got {type(rng).__name__}"
+        )
+    return rng
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,7 +44,9 @@ class MatrixSpec:
 def hpcg_stencil(nx: int, ny: int, nz: int) -> Gen:
     """HPCG-style 27-point stencil on an nx*ny*nz grid (symmetric, diag-heavy)."""
 
-    def build(rng: np.random.Generator) -> CSRMatrix:
+    def build(rng: np.random.Generator | None = None, *,
+              seed: int = 0) -> CSRMatrix:
+        rng = _resolve_rng(rng, seed)
         n = nx * ny * nz
         ix, iy, iz = np.meshgrid(
             np.arange(nx), np.arange(ny), np.arange(nz), indexing="ij"
@@ -62,7 +78,9 @@ def hpcg_stencil(nx: int, ny: int, nz: int) -> Gen:
 def banded(n: int, half_bw: int, fill: float = 0.6) -> Gen:
     """Banded matrix: nonzeros within |i-j| <= half_bw, randomly filled."""
 
-    def build(rng: np.random.Generator) -> CSRMatrix:
+    def build(rng: np.random.Generator | None = None, *,
+              seed: int = 0) -> CSRMatrix:
+        rng = _resolve_rng(rng, seed)
         nnz_per_row = max(1, int((2 * half_bw + 1) * fill))
         rows = np.repeat(np.arange(n), nnz_per_row)
         offs = rng.integers(-half_bw, half_bw + 1, size=rows.size)
@@ -77,7 +95,9 @@ def powerlaw(n: int, avg_deg: int, alpha: float = 1.2) -> Gen:
     """Scale-free graph adjacency: column targets drawn from a Zipf-like hub
     distribution — models graph-analytics matrices with heavy column reuse."""
 
-    def build(rng: np.random.Generator) -> CSRMatrix:
+    def build(rng: np.random.Generator | None = None, *,
+              seed: int = 0) -> CSRMatrix:
+        rng = _resolve_rng(rng, seed)
         deg = np.minimum(
             rng.zipf(1.0 + 1.0 / alpha, size=n), 20 * avg_deg
         ).astype(np.int64)
@@ -96,7 +116,9 @@ def powerlaw(n: int, avg_deg: int, alpha: float = 1.2) -> Gen:
 def random_uniform(n: int, nnz_per_row: int) -> Gen:
     """Uniform random columns — the coalescer's worst case."""
 
-    def build(rng: np.random.Generator) -> CSRMatrix:
+    def build(rng: np.random.Generator | None = None, *,
+              seed: int = 0) -> CSRMatrix:
+        rng = _resolve_rng(rng, seed)
         rows = np.repeat(np.arange(n), nnz_per_row)
         cols = rng.integers(0, n, size=rows.size)
         vals = rng.standard_normal(rows.size)
@@ -108,7 +130,9 @@ def random_uniform(n: int, nnz_per_row: int) -> Gen:
 def block_diag(n: int, block: int, fill: float = 0.5) -> Gen:
     """Block-diagonal (FEM-like local coupling) — near-perfect coalescing."""
 
-    def build(rng: np.random.Generator) -> CSRMatrix:
+    def build(rng: np.random.Generator | None = None, *,
+              seed: int = 0) -> CSRMatrix:
+        rng = _resolve_rng(rng, seed)
         nnz_per_row = max(1, int(block * fill))
         rows = np.repeat(np.arange(n), nnz_per_row)
         base = (rows // block) * block
@@ -116,6 +140,42 @@ def block_diag(n: int, block: int, fill: float = 0.5) -> Gen:
         cols = np.minimum(cols, n - 1)
         vals = rng.standard_normal(rows.size)
         return coo_to_csr(n, n, rows, cols, vals)
+
+    return build
+
+
+def make_spd(csr: CSRMatrix, shift: float = 1.0) -> CSRMatrix:
+    """Symmetrize-and-shift an arbitrary square sparse matrix into a
+    strictly diagonally dominant SPD matrix with the same sparsity flavor:
+    B = (A + A^T)/2, then diag += |row sums of B| + shift. Gerschgorin puts
+    every eigenvalue in (0, 2*max_diag), so CG/Jacobi are guaranteed to
+    converge while the off-diagonal index stream keeps the source matrix's
+    locality spectrum (what the coalescer actually sees)."""
+    if csr.n_rows != csr.n_cols:
+        raise ValueError(
+            f"make_spd needs a square matrix, got {csr.n_rows}x{csr.n_cols}"
+        )
+    n = csr.n_rows
+    row_of = np.repeat(np.arange(n), np.diff(csr.indptr))
+    half = csr.data.astype(np.float64) / 2.0
+    rows = np.concatenate([row_of, csr.indices.astype(np.int64)])
+    cols = np.concatenate([csr.indices.astype(np.int64), row_of])
+    vals = np.concatenate([half, half])
+    absrow = np.zeros(n, dtype=np.float64)
+    np.add.at(absrow, rows, np.abs(vals))
+    rows = np.concatenate([rows, np.arange(n)])
+    cols = np.concatenate([cols, np.arange(n)])
+    vals = np.concatenate([vals, absrow + shift])
+    return coo_to_csr(n, n, rows, cols, vals)
+
+
+def spd(n: int, half_bw: int, fill: float = 0.6) -> Gen:
+    """Random SPD matrix (banded sparsity, symmetrized + diagonally
+    dominant) — the test/benchmark input for CG and Jacobi."""
+
+    def build(rng: np.random.Generator | None = None, *,
+              seed: int = 0) -> CSRMatrix:
+        return make_spd(banded(n, half_bw, fill)(_resolve_rng(rng, seed)))
 
     return build
 

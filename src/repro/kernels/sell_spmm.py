@@ -117,8 +117,9 @@ def sell_spmm_pallas(
     if k_tile < 1:
         raise ValueError(f"k_tile must be >= 1, got {k_tile}")
     k = int(X.shape[1])
+    out_dtype = jnp.promote_types(values.dtype, X.dtype)
     if k == 0:
-        return jnp.zeros((n_slices * H, 0), values.dtype)
+        return jnp.zeros((n_slices * H, 0), out_dtype)
     n_chunks = W // cols_per_chunk
     window = cols_per_chunk * H
     dplan = resolve_device_plan(
@@ -166,7 +167,9 @@ def sell_spmm_pallas(
             k_tile=kt,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_slices, H, k_pad), values.dtype),
+        # Accumulate in the promoted dtype (bf16 values x f32 RHS -> f32
+        # accumulation), matching ref.sell_spmm_ref's natural promotion.
+        out_shape=jax.ShapeDtypeStruct((n_slices, H, k_pad), out_dtype),
         interpret=interpret,
     )(dplan.tags, dplan.elem_warp, dplan.elem_offset, vals, X_p)
     return out.reshape(n_slices * H, k_pad)[:, :k]

@@ -302,7 +302,11 @@ def sell_spmv_pallas(
             slice_height=H,
         ),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_slices, H), values.dtype),
+        # Accumulate in the promoted dtype (bf16 values x f32 input -> f32
+        # accumulation), matching ref.sell_spmv_ref's natural promotion.
+        out_shape=jax.ShapeDtypeStruct(
+            (n_slices, H), jnp.promote_types(values.dtype, x.dtype)
+        ),
         interpret=interpret,
     )(dplan.tags, dplan.elem_warp, dplan.elem_offset, vals, x_p)
     return out.reshape(-1)

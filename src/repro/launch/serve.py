@@ -69,6 +69,68 @@ _SPMV_MATRICES = {
 }
 
 
+def serve_solve(args) -> None:
+    """Iterative-solver serving: one plan-once engine, a device-resident
+    `lax.while_loop` per solve (core.solvers). Prints the cold solve
+    (including how many coalescing schedules were built — exactly one) and
+    warm-solve throughput in iterations/s over --requests repeats."""
+    from repro.core import solvers
+    from repro.core.matrices import make_spd
+
+    gen = _SPMV_MATRICES[args.spmv](args.spmv_rows)
+    csr = gen(seed=args.seed)
+    if args.solve in ("cg", "jacobi"):
+        csr = make_spd(csr)  # CG/Jacobi need SPD / diag-dominant input
+    kw = dict(
+        backend=args.backend, window=args.window, block_rows=args.block_rows,
+    )
+    solver = {
+        "cg": lambda m, b: solvers.cg(m, b, tol=1e-6, **kw),
+        "jacobi": lambda m, b: solvers.jacobi(m, b, tol=1e-6, **kw),
+        "pagerank": lambda m, b: solvers.pagerank(m, tol=1e-7, **kw),
+        "power": lambda m, b: solvers.power_iteration(m, tol=1e-5, **kw),
+    }[args.solve]
+    b = np.random.default_rng(args.seed + 1).standard_normal(
+        csr.n_rows
+    ).astype(np.float32)
+
+    t0 = time.time()
+    cold = solver(csr, b)
+    cold_s = time.time() - t0
+    print(
+        f"solve-serve: {args.solve} on {args.spmv} {csr.n_rows}x"
+        f"{csr.n_cols} nnz={csr.data.size} backend={args.backend}"
+    )
+    print(
+        f"  cold: {cold.iterations} iters in {cold_s:.3f}s "
+        f"(schedule_builds={cold.schedule_builds}, loop={cold.loop})"
+    )
+    t0 = time.time()
+    iters = 0
+    res = cold
+    for _ in range(max(1, args.requests)):
+        res = solver(csr, b)
+        iters += res.iterations
+    warm_s = time.time() - t0
+    extra = (
+        f" eigenvalue={res.eigenvalue:.6g}" if res.eigenvalue is not None
+        else ""
+    )
+    print(
+        f"  warm: {max(1, args.requests)} solves, "
+        f"{iters / warm_s:.1f} iters/s "
+        f"(schedule_builds={res.schedule_builds}, residual="
+        f"{res.residual:.3e}, converged={res.converged}{extra})"
+    )
+    if not res.converged:
+        raise SystemExit(f"solve-serve: {args.solve} did not converge")
+    if cold.schedule_builds != 1 or res.schedule_builds != 0:
+        raise SystemExit(
+            f"solve-serve: plan-reuse violation (cold built "
+            f"{cold.schedule_builds}, warm built {res.schedule_builds})"
+        )
+
+
 def serve_spmv(args) -> None:
     """Batched SpMV serving: one engine, many right-hand-side batches.
 
@@ -296,6 +358,13 @@ def main() -> None:
     )
     ap.add_argument("--spmv-rows", type=int, default=8192)
     ap.add_argument(
+        "--solve", choices=("cg", "pagerank", "jacobi", "power"),
+        help="serve an iterative solver (core.solvers) over the --spmv "
+        "matrix family instead of raw SpMV batches: the whole iteration "
+        "runs in one device-resident lax.while_loop over the engine's "
+        "hoisted plan (cg/jacobi SPD-ify the matrix via make_spd)",
+    )
+    ap.add_argument(
         "--window", type=int, default=None,
         help="coalescer window (default: 256 for the reference backend, "
         "cols_per_chunk*slice_height for pallas)",
@@ -348,8 +417,13 @@ def main() -> None:
     )
     args = ap.parse_args()
 
+    if args.solve and not args.spmv:
+        ap.error("--solve requires --spmv to pick the matrix family")
     if args.spmv:
-        serve_spmv(args)
+        if args.solve:
+            serve_solve(args)
+        else:
+            serve_spmv(args)
         return
     if not args.arch:
         ap.error("--arch is required unless --spmv is given")

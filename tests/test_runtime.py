@@ -25,8 +25,6 @@ from repro.core import (
     ShardedSpMVEngine,
     SpMVEngine,
     StreamingExecutor,
-    clear_engine_cache,
-    clear_schedule_cache,
     column_groups,
     csr_to_sell,
     microbatch_slices,
@@ -41,11 +39,8 @@ REPO = Path(__file__).resolve().parent.parent
 RNG = np.random.default_rng(77)
 
 
-@pytest.fixture(autouse=True)
-def _fresh_caches():
-    clear_engine_cache()
-    clear_schedule_cache()
-    yield
+# (engine/schedule caches are cleared before every test by the global
+# autouse fixture in conftest.py)
 
 
 def _sell_case(n_rows, n_cols, density, slice_height, seed, force_width=None):
@@ -488,3 +483,70 @@ def test_streamed_sharded_parity_on_forced_8_device_mesh():
     assert res["n_dev"] == 8
     assert res["mesh"] == [4, 2]
     assert res["bitwise"] and res["drained"]
+
+
+# ---------------------------------------------------------------------------
+# Property tests for the shared geometry helpers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(k=st.integers(0, 400), microbatch=st.integers(1, 64))
+def test_microbatch_slices_partition_property(k, microbatch):
+    """Property: for any (k, microbatch) — including k=0 and
+    microbatch > k — the slices cover [0, k) exactly once, in order, with
+    every slice full except possibly the last."""
+    slices = microbatch_slices(k, microbatch)
+    prev_stop = 0
+    for s in slices:
+        assert s.start == prev_stop
+        assert 0 < s.stop - s.start <= microbatch
+        prev_stop = s.stop
+    assert prev_stop == k
+    for s in slices[:-1]:
+        assert s.stop - s.start == microbatch
+    covered = np.concatenate(
+        [np.arange(s.start, s.stop) for s in slices]
+    ) if slices else np.empty(0, np.int64)
+    np.testing.assert_array_equal(covered, np.arange(k))
+
+
+def _sell_to_dense(sell):
+    """Scatter a SELL matrix back to dense; padded entries carry value 0 at
+    column 0, so summing duplicates is exact."""
+    dense = np.zeros((sell.n_slices * sell.slice_height, sell.n_cols))
+    H = sell.slice_height
+    for s in range(sell.n_slices):
+        ci, va = sell.slice_arrays(s)
+        for w in range(ci.shape[0]):
+            for h in range(ci.shape[1]):
+                dense[s * H + h, ci[w, h]] += va[w, h]
+    return dense[: sell.n_rows]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_rows=st.integers(1, 60),
+    n_cols=st.integers(1, 80),
+    density=st.floats(0.0, 0.4),
+    slice_height=st.sampled_from([1, 4, 8]),
+    width_multiple=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normalize_to_sell_roundtrips_arbitrary_csr(
+    n_rows, n_cols, density, slice_height, width_multiple, seed
+):
+    """Property: normalize_to_sell(csr) represents exactly the same matrix
+    (dense reconstruction matches bit for bit, including empty rows and
+    all-zero matrices), and a SELL input passes through untouched."""
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal((n_rows, n_cols)) * (
+        rng.random((n_rows, n_cols)) < density
+    )
+    csr = dense_to_csr(dense)
+    sell = normalize_to_sell(
+        csr, slice_height=slice_height, width_multiple=width_multiple
+    )
+    assert sell.n_rows == n_rows and sell.n_cols == n_cols
+    np.testing.assert_array_equal(_sell_to_dense(sell), dense)
+    assert normalize_to_sell(sell) is sell

@@ -1,0 +1,444 @@
+"""Iterative solvers: convergence properties, loop-oracle bit-identity,
+plan-reuse counters.
+
+The contracts pinned here, per ISSUE 6:
+- CG on random SPD matrices converges to the scipy-reference solution
+  within tolerance (numpy dense solve stands in when scipy is absent);
+- PageRank output is a probability distribution (non-negative, sums to 1)
+  matching dense power iteration;
+- `lax.while_loop` results are bit-identical to the eager Python-loop
+  oracle on the reference backend (same jitted step, two drivers);
+- pallas-backend solves agree with reference at 1e-5;
+- schedule-cache counters prove the coalescing plan is built exactly once
+  per solve, regardless of iteration count, and zero times when warm.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ShardedSpMVEngine,
+    SpMVEngine,
+    cg,
+    csr_to_sell,
+    get_engine,
+    jacobi,
+    pagerank,
+    power_iteration,
+    schedule_cache_stats,
+    transition_matrix,
+)
+from repro.core.matrices import banded, make_spd, powerlaw, spd
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _reference_solve(csr, b):
+    """x = A^-1 b in float64: scipy sparse solve when available, numpy
+    dense solve otherwise (CI installs jax+numpy only)."""
+    try:
+        import scipy.sparse as sp
+        import scipy.sparse.linalg as spla
+
+        A = sp.csr_matrix(
+            (csr.data, csr.indices, csr.indptr), shape=(csr.n_rows, csr.n_cols)
+        )
+        return spla.spsolve(A.astype(np.float64), b.astype(np.float64))
+    except ImportError:
+        return np.linalg.solve(
+            csr.todense().astype(np.float64), b.astype(np.float64)
+        )
+
+
+def _rhs(n, seed):
+    return np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# CG convergence vs the scipy/numpy reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,half_bw,seed", [
+    (48, 4, 0),
+    (120, 6, 1),
+    (200, 10, 2),
+])
+def test_cg_matches_reference_solution_on_random_spd(n, half_bw, seed):
+    csr = spd(n, half_bw, 0.6)(seed=seed)
+    b = _rhs(n, seed + 100)
+    res = cg(csr, b, tol=1e-6, backend="reference", trace=True)
+    assert res.converged
+    assert res.solver == "cg" and res.loop == "while"
+    x = np.asarray(res.x, np.float64)
+    x_ref = _reference_solve(csr, b)
+    assert np.abs(x - x_ref).max() <= 1e-3 * max(1.0, np.abs(x_ref).max())
+    # the reported residual is the true relative residual of the answer
+    dense = csr.todense().astype(np.float64)
+    true_res = np.linalg.norm(b - dense @ x) / np.linalg.norm(b)
+    assert true_res <= 5e-6
+    # trace bookkeeping: one entry per iteration, last entry produced the
+    # reported (relative) residual
+    assert res.residual_trace.shape == (res.iterations,)
+    bnorm = np.linalg.norm(b.astype(np.float64))
+    np.testing.assert_allclose(
+        res.residual_trace[-1] / bnorm, res.residual, rtol=1e-5
+    )
+
+
+def test_cg_honors_maxiter_and_x0():
+    csr = spd(100, 5, 0.6)(seed=3)
+    b = _rhs(100, 4)
+    short = cg(csr, b, tol=1e-12, maxiter=3, backend="reference")
+    assert short.iterations == 3 and not short.converged
+    # warm-starting from the exact solution converges immediately
+    full = cg(csr, b, tol=1e-6, backend="reference")
+    warm = cg(csr, b, tol=1e-5, x0=np.asarray(full.x), backend="reference")
+    assert warm.iterations <= 2
+
+
+def test_cg_rejects_non_square():
+    from repro.core.formats import dense_to_csr
+
+    rect = dense_to_csr(np.ones((4, 6)))
+    with pytest.raises(ValueError, match="square"):
+        cg(rect, np.ones(4, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# while_loop == eager Python-loop oracle, bit for bit (reference backend)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tol,maxiter", [(1e-6, None), (0.0, 7)])
+def test_cg_while_loop_bit_identical_to_python_oracle(tol, maxiter):
+    csr = spd(150, 6, 0.6)(seed=5)
+    b = _rhs(150, 6)
+    eng = get_engine(csr, backend="reference")
+    res_w = cg(eng, b, tol=tol, maxiter=maxiter, trace=True, loop="while")
+    res_p = cg(eng, b, tol=tol, maxiter=maxiter, trace=True, loop="python")
+    assert res_w.loop == "while" and res_p.loop == "python"
+    assert res_w.iterations == res_p.iterations
+    np.testing.assert_array_equal(np.asarray(res_w.x), np.asarray(res_p.x))
+    np.testing.assert_array_equal(res_w.residual_trace, res_p.residual_trace)
+
+
+def test_pagerank_while_loop_bit_identical_to_python_oracle():
+    adj = powerlaw(250, 4)(seed=8)
+    eng = get_engine(transition_matrix(adj), backend="reference")
+    res_w = pagerank(eng, tol=1e-10, trace=True, loop="while")
+    res_p = pagerank(eng, tol=1e-10, trace=True, loop="python")
+    assert res_w.iterations == res_p.iterations
+    np.testing.assert_array_equal(np.asarray(res_w.x), np.asarray(res_p.x))
+    np.testing.assert_array_equal(res_w.residual_trace, res_p.residual_trace)
+
+
+def test_jacobi_and_power_while_vs_python_oracle():
+    csr = spd(90, 4, 0.6)(seed=9)
+    b = _rhs(90, 10)
+    jw = jacobi(csr, b, tol=1e-6, loop="while", backend="reference")
+    jp = jacobi(csr, b, tol=1e-6, loop="python", backend="reference")
+    np.testing.assert_array_equal(np.asarray(jw.x), np.asarray(jp.x))
+    assert jw.iterations == jp.iterations
+    pw = power_iteration(csr, tol=1e-5, loop="while", backend="reference")
+    pp = power_iteration(csr, tol=1e-5, loop="python", backend="reference")
+    np.testing.assert_array_equal(np.asarray(pw.x), np.asarray(pp.x))
+    assert pw.eigenvalue == pp.eigenvalue
+
+
+# ---------------------------------------------------------------------------
+# PageRank: probability distribution + dense power-iteration match
+# ---------------------------------------------------------------------------
+
+
+def _dense_pagerank(adj, damping, tol, maxiter=500):
+    """Dense float64 oracle of the same mass-conserving iteration."""
+    M = transition_matrix(adj).todense().astype(np.float64)
+    n = M.shape[0]
+    x = np.full(n, 1.0 / n)
+    for _ in range(maxiter):
+        y = damping * (M @ x)
+        y += (1.0 - y.sum()) / n
+        if np.abs(y - x).sum() <= tol:
+            return y
+        x = y
+    return x
+
+
+@pytest.mark.parametrize("n,deg,seed", [(200, 4, 1), (400, 3, 2)])
+def test_pagerank_is_probability_distribution_matching_dense(n, deg, seed):
+    # tol must stay reachable in f32: the L1 delta floors around n * eps
+    adj = powerlaw(n, deg)(seed=seed)
+    res = pagerank(adj, tol=1e-7, backend="reference")
+    assert res.converged
+    x = np.asarray(res.x, np.float64)
+    assert (x >= -1e-12).all()
+    assert abs(x.sum() - 1.0) <= 1e-5
+    x_dense = _dense_pagerank(adj, 0.85, 1e-12)
+    assert np.abs(x - x_dense).max() <= 5e-6
+
+
+def test_pagerank_handles_dangling_nodes():
+    """Rows with no out-edges must not leak rank mass."""
+    from repro.core.formats import coo_to_csr
+
+    # 5-node graph where node 4 is dangling
+    rows = np.array([0, 0, 1, 2, 3])
+    cols = np.array([1, 2, 3, 4, 4])
+    adj = coo_to_csr(5, 5, rows, cols, np.ones(5))
+    res = pagerank(adj, tol=1e-12, backend="reference")
+    x = np.asarray(res.x, np.float64)
+    assert abs(x.sum() - 1.0) <= 1e-6
+    assert (x > 0).all()
+    x_dense = _dense_pagerank(adj, 0.85, 1e-14)
+    assert np.abs(x - x_dense).max() <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Jacobi and power iteration convergence
+# ---------------------------------------------------------------------------
+
+
+def test_jacobi_converges_on_diagonally_dominant_spd():
+    csr = spd(150, 5, 0.6)(seed=11)
+    b = _rhs(150, 12)
+    res = jacobi(csr, b, tol=1e-6, backend="reference", trace=True)
+    assert res.converged
+    x = np.asarray(res.x, np.float64)
+    x_ref = _reference_solve(csr, b)
+    assert np.abs(x - x_ref).max() <= 1e-3 * max(1.0, np.abs(x_ref).max())
+    assert res.residual_trace.shape == (res.iterations,)
+
+
+def test_jacobi_rejects_zero_diagonal():
+    from repro.core.formats import dense_to_csr
+
+    dense = np.eye(4)
+    dense[2, 2] = 0.0
+    dense[2, 3] = 1.0
+    with pytest.raises(ValueError, match="diagonal"):
+        jacobi(dense_to_csr(dense), np.ones(4, np.float32),
+               backend="reference")
+
+
+def test_power_iteration_finds_dominant_eigenpair():
+    csr = spd(80, 4, 0.6)(seed=13)
+    res = power_iteration(csr, tol=1e-5, maxiter=2000, backend="reference")
+    lam_true = np.linalg.eigvalsh(csr.todense().astype(np.float64)).max()
+    assert abs(res.eigenvalue - lam_true) <= 1e-3 * lam_true
+    # eigen-residual: ||A v - lam v|| small relative to lam
+    v = np.asarray(res.x, np.float64)
+    dense = csr.todense().astype(np.float64)
+    assert np.linalg.norm(dense @ v - res.eigenvalue * v) <= 1e-3 * lam_true
+
+
+# ---------------------------------------------------------------------------
+# Pallas parity at 1e-5
+# ---------------------------------------------------------------------------
+
+
+def test_cg_pallas_parity_1e5():
+    csr = spd(120, 5, 0.6)(seed=15)
+    b = _rhs(120, 16)
+    # fixed iteration count: parity of the iterates themselves, not of the
+    # stopping decision (a 1-ulp residual difference may shift the exit)
+    kw = dict(tol=0.0, maxiter=10)
+    res_ref = cg(csr, b, backend="reference", **kw)
+    res_pal = cg(csr, b, backend="pallas", cols_per_chunk=4, **kw)
+    assert res_pal.iterations == res_ref.iterations == 10
+    scale = max(1.0, np.abs(np.asarray(res_ref.x)).max())
+    assert np.abs(
+        np.asarray(res_pal.x) - np.asarray(res_ref.x)
+    ).max() <= 1e-5 * scale
+    # and the converged pallas solve passes the true-residual check
+    full = cg(csr, b, tol=1e-6, backend="pallas", cols_per_chunk=4)
+    assert full.converged
+    dense = csr.todense().astype(np.float64)
+    x = np.asarray(full.x, np.float64)
+    assert np.linalg.norm(b - dense @ x) / np.linalg.norm(b) <= 5e-6
+
+
+def test_pagerank_pallas_parity_1e5():
+    adj = powerlaw(200, 4)(seed=17)
+    kw = dict(tol=0.0, maxiter=15)
+    res_ref = pagerank(adj, backend="reference", **kw)
+    res_pal = pagerank(adj, backend="pallas", cols_per_chunk=4, **kw)
+    assert res_pal.iterations == res_ref.iterations == 15
+    assert np.abs(
+        np.asarray(res_pal.x) - np.asarray(res_ref.x)
+    ).max() <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Plan reuse: exactly one schedule build per solve
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("maxiter", [3, 40])
+def test_exactly_one_schedule_build_per_solve(backend, maxiter):
+    """The coalescing schedule is built once per solve — independent of the
+    iteration count — and not at all when the engine is warm. (The global
+    autouse fixture clears all caches before each test, so the counters
+    start from zero.)"""
+    csr = spd(130, 6, 0.6)(seed=19)
+    b = _rhs(130, 20)
+    assert schedule_cache_stats()["built"] == 0
+    cold = cg(csr, b, tol=0.0, maxiter=maxiter, backend=backend,
+              cols_per_chunk=4)
+    assert cold.iterations == maxiter
+    assert cold.schedule_builds == 1
+    assert schedule_cache_stats()["built"] == 1
+    warm = cg(csr, b, tol=1e-6, backend=backend, cols_per_chunk=4)
+    assert warm.schedule_builds == 0
+    assert schedule_cache_stats()["built"] == 1
+
+
+def test_pagerank_single_schedule_build():
+    adj = powerlaw(180, 4)(seed=21)
+    assert schedule_cache_stats()["built"] == 0
+    res = pagerank(adj, tol=1e-10, backend="reference")
+    assert res.schedule_builds == 1
+    assert res.iterations > 10  # many iterations, still one build
+    again = pagerank(adj, tol=1e-10, backend="reference")
+    assert again.schedule_builds == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution: host loop with mesh-data-axis dot reduction
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_cg_matches_single_device():
+    csr = spd(240, 5, 0.6)(seed=23)
+    b = _rhs(240, 24)
+    sharded = ShardedSpMVEngine(csr_to_sell(csr), n_shards=3,
+                                backend="reference")
+    res_sh = cg(sharded, b, tol=1e-6, trace=True)
+    assert res_sh.loop == "host" and res_sh.converged
+    res_single = cg(csr, b, tol=1e-6, backend="reference")
+    scale = max(1.0, np.abs(np.asarray(res_single.x)).max())
+    assert np.abs(
+        np.asarray(res_sh.x) - np.asarray(res_single.x)
+    ).max() <= 1e-5 * scale
+
+
+def test_sharded_matvec_parts_cover_all_rows():
+    csr = spd(100, 4, 0.6)(seed=25)
+    sell = csr_to_sell(csr)
+    sharded = ShardedSpMVEngine(sell, n_shards=2, backend="reference")
+    x = _rhs(100, 26)
+    parts = sharded.matvec_parts(x)
+    lo_hi = [rng for _, _, rng in parts]
+    assert lo_hi[0][0] == 0 and lo_hi[-1][1] == 100
+    for (_, prev_hi), (lo, _) in zip(lo_hi, lo_hi[1:]):
+        assert prev_hi == lo
+    gathered = np.concatenate([np.asarray(p) for p, _, _ in parts])
+    np.testing.assert_array_equal(gathered, sharded.matvec(x))
+
+
+def test_device_loops_rejected_without_device_matvec():
+    csr = spd(60, 4, 0.6)(seed=27)
+    sharded = ShardedSpMVEngine(csr_to_sell(csr), n_shards=2,
+                                backend="reference")
+    with pytest.raises(ValueError, match="device_matvec"):
+        cg(sharded, _rhs(60, 28), loop="while")
+    with pytest.raises(ValueError, match="loop"):
+        cg(csr, _rhs(60, 28), loop="bogus", backend="reference")
+    eng = SpMVEngine(csr_to_sell(csr), backend="reference")
+    host = cg(eng, _rhs(60, 28), tol=1e-6, loop="host")
+    assert host.loop == "host" and host.converged
+
+
+# ---------------------------------------------------------------------------
+# Deterministic generators (the seed= satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_generators_deterministic_in_seed():
+    a = spd(64, 4, 0.6)(seed=3)
+    b_ = spd(64, 4, 0.6)(seed=3)
+    np.testing.assert_array_equal(a.data, b_.data)
+    np.testing.assert_array_equal(a.indices, b_.indices)
+    c = spd(64, 4, 0.6)(seed=4)
+    assert not (
+        a.data.shape == c.data.shape and np.array_equal(a.data, c.data)
+    )
+    p1 = powerlaw(128, 4)(seed=9)
+    p2 = powerlaw(128, 4)(seed=9)
+    np.testing.assert_array_equal(p1.indices, p2.indices)
+    # explicit Generator still supported (the suite builder passes one)
+    g = banded(50, 3)(np.random.default_rng(5))
+    g2 = banded(50, 3)(seed=5)
+    np.testing.assert_array_equal(g.data, g2.data)
+    with pytest.raises(TypeError, match="Generator"):
+        banded(50, 3)(12345)
+
+
+def test_make_spd_is_symmetric_and_diagonally_dominant():
+    csr = make_spd(powerlaw(90, 5)(seed=31))
+    dense = csr.todense()
+    np.testing.assert_allclose(dense, dense.T, atol=1e-12)
+    off = np.abs(dense).sum(axis=1) - np.abs(np.diag(dense))
+    assert (np.diag(dense) > off).all()  # strict dominance => SPD
+    eigs = np.linalg.eigvalsh(dense)
+    assert eigs.min() > 0
+
+
+# ---------------------------------------------------------------------------
+# Forced 8-device mesh (subprocess, slow)
+# ---------------------------------------------------------------------------
+
+
+MULTIDEV_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import numpy as np
+    from repro.core import ShardedSpMVEngine, cg, csr_to_sell
+    from repro.core.matrices import spd
+
+    csr = spd(400, 6, 0.6)(seed=41)
+    b = np.random.default_rng(42).standard_normal(400).astype(np.float32)
+    sharded = ShardedSpMVEngine(csr_to_sell(csr), backend="reference")
+    res_sh = cg(sharded, b, tol=1e-6)
+    res_single = cg(csr, b, tol=1e-6, backend="reference")
+    diff = float(np.abs(np.asarray(res_sh.x)
+                        - np.asarray(res_single.x)).max())
+    print(json.dumps({
+        "n_dev": len(jax.devices()),
+        "n_shards": sharded.n_shards,
+        "loop": res_sh.loop,
+        "converged": bool(res_sh.converged),
+        "max_diff": diff,
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_cg_parity_on_forced_8_device_mesh():
+    """Acceptance: CG through the sharded engine on a real 8-device host
+    mesh (dot products reduced over the data axis) matches the
+    single-device solve at 1e-5."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SNIPPET],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_dev"] == 8
+    assert res["n_shards"] > 1
+    assert res["loop"] == "host"
+    assert res["converged"]
+    assert res["max_diff"] <= 1e-5
