@@ -85,11 +85,27 @@ def _resolve_operator(A, *, backend: str, engine_kw: dict):
     if isinstance(A, (CSRMatrix, SELLMatrix)):
         return get_engine(A, backend=backend, **engine_kw)
     if callable(getattr(A, "matvec", None)):
+        if backend != "auto" or engine_kw:
+            opts = [f"backend={backend!r}"] if backend != "auto" else []
+            opts += [f"{k}=..." for k in engine_kw]
+            raise ValueError(
+                f"{', '.join(opts)} cannot be applied to a prebuilt "
+                f"{type(A).__name__} — it already fixes the backend and "
+                f"engine options; pass the matrix instead, or drop the "
+                f"engine arguments"
+            )
         return A
     raise TypeError(
         f"expected a CSRMatrix/SELLMatrix or an Executor with .matvec, got "
         f"{type(A).__name__}"
     )
+
+
+def _default_dtype() -> np.dtype:
+    """JAX's default real dtype (f32, or f64 under jax_enable_x64) — the
+    single source for both the device and host loop drivers, so loop='host'
+    and loop='while' agree in precision."""
+    return np.dtype(jnp.zeros(0).dtype)
 
 
 def _resolve_loop(loop: str, ex) -> str:
@@ -120,7 +136,13 @@ def _loop_runners(ex, key, cond, step):
     """Jitted while-runner + cond/step for the python oracle, cached per
     executor so repeat solves (same solver/maxiter/dtype) retrace nothing.
     The cache rides on the executor instance, which also owns the matvec
-    the closures capture — their lifetimes match by construction."""
+    the closures capture — their lifetimes match by construction.
+
+    Invariant: cond/step may only close over values that are constant for
+    the executor's lifetime (the matvec, maxiter, n). Anything that can
+    differ between calls sharing a cache key — b, tolerances, damping —
+    must flow through the loop state, or a warm solve replays the first
+    call's value as a baked-in jit constant."""
     cache = ex.__dict__.setdefault("_solver_loop_cache", {})
     entry = cache.get(key)
     if entry is None:
@@ -378,25 +400,30 @@ def _jacobi_device(ex, b, *, inv_d, tol, maxiter, x0, trace,
     tol2 = jnp.asarray(tol, bb.dtype) ** 2 * bb
     inv_dj = jnp.asarray(inv_d, b.dtype)
     tr = jnp.zeros((maxiter,), b.dtype)
+    # b rides in the loop state (not the closure): the jitted cond/step are
+    # cached per executor keyed only on (solver, maxiter, dtype), and a
+    # closure-captured b would be baked into the compiled step as a
+    # constant — a warm-engine solve with a different RHS would silently
+    # solve the *first* system.
     state = (
-        x, jnp.asarray(jnp.inf, b.dtype), jnp.asarray(0, jnp.int32),
+        x, b, jnp.asarray(jnp.inf, b.dtype), jnp.asarray(0, jnp.int32),
         inv_dj, tol2, tr,
     )
 
     def cond(s):
-        _x, rr, k, _inv_d, tol2, _tr = s
+        _x, _b, rr, k, _inv_d, tol2, _tr = s
         return (k < maxiter) & (rr > tol2)
 
     def step(s):
-        x, _rr, k, inv_d, tol2, tr = s
+        x, b, _rr, k, inv_d, tol2, tr = s
         r = b - mv(x)
         rr = jnp.vdot(r, r)
         x = x + inv_d * r
         tr = tr.at[k].set(jnp.sqrt(rr))
-        return (x, rr, k + 1, inv_d, tol2, tr)
+        return (x, b, rr, k + 1, inv_d, tol2, tr)
 
     entry = _loop_runners(ex, ("jacobi", maxiter, str(b.dtype)), cond, step)
-    x, rr, k, _, tol2, tr = _drive(entry, state, mode)
+    x, _b, rr, k, _, tol2, tr = _drive(entry, state, mode)
     iters = int(k)
     bb_f = float(bb)
     rr_f = float(rr) if np.isfinite(float(rr)) else float("inf")
@@ -516,7 +543,7 @@ def pagerank(
 def _pagerank_device(ex, n, *, damping, tol, maxiter, x0, trace,
                      mode) -> SolveResult:
     mv = ex.device_matvec()
-    dtype = jnp.zeros(0).dtype  # default real dtype (f32 without x64)
+    dtype = _default_dtype()  # f32, or f64 under jax_enable_x64
     x = (jnp.full((n,), 1.0 / n, dtype) if x0 is None
          else jnp.asarray(x0, dtype))
     damp = jnp.asarray(damping, dtype)
@@ -558,7 +585,7 @@ def _pagerank_device(ex, n, *, damping, tol, maxiter, x0, trace,
 
 
 def _pagerank_host(ex, n, *, damping, tol, maxiter, x0, trace) -> SolveResult:
-    dtype = np.float32
+    dtype = _default_dtype()  # same source as the device path
     x = (np.full((n,), 1.0 / n, dtype) if x0 is None
          else np.asarray(x0, dtype))
     delta = float("inf")
@@ -622,7 +649,7 @@ def power_iteration(
 
 def _power_device(ex, n, *, tol, maxiter, x0, trace, mode) -> SolveResult:
     mv = ex.device_matvec()
-    dtype = jnp.zeros(0).dtype
+    dtype = _default_dtype()
     x = (jnp.full((n,), 1.0 / math.sqrt(n), dtype) if x0 is None
          else jnp.asarray(x0, dtype))
     x = x / jnp.sqrt(jnp.vdot(x, x))
@@ -664,7 +691,7 @@ def _power_device(ex, n, *, tol, maxiter, x0, trace, mode) -> SolveResult:
 
 
 def _power_host(ex, n, *, tol, maxiter, x0, trace) -> SolveResult:
-    dtype = np.float32
+    dtype = _default_dtype()
     x = (np.full((n,), 1.0 / math.sqrt(n), dtype) if x0 is None
          else np.asarray(x0, dtype))
     x = x / np.sqrt(np.dot(x, x))

@@ -216,6 +216,28 @@ def test_jacobi_converges_on_diagonally_dominant_spd():
     assert res.residual_trace.shape == (res.iterations,)
 
 
+def test_jacobi_warm_engine_solves_each_rhs():
+    """Regression: the jitted cond/step are cached on the executor keyed by
+    (solver, maxiter, dtype), so per-call values like b must ride in the
+    loop state — a closure-captured b is baked into the compiled step as a
+    jit constant, and a warm-engine solve with a different RHS silently
+    returns the *first* system's solution while reporting converged."""
+    csr = spd(110, 5, 0.6)(seed=33)
+    eng = get_engine(csr, backend="reference")
+    dense = csr.todense().astype(np.float64)
+    b1, b2 = _rhs(110, 34), _rhs(110, 35)
+    for b in (b1, b2, b1):  # warm re-solve, new RHS, back to the first
+        res = jacobi(eng, b, tol=1e-6, loop="while")
+        assert res.converged
+        x = np.asarray(res.x, np.float64)
+        true_res = np.linalg.norm(b - dense @ x) / np.linalg.norm(b)
+        assert true_res <= 1e-5
+    # cg shares the cached-runner machinery — pin the same contract there
+    for b in (b1, b2):
+        x = np.asarray(cg(eng, b, tol=1e-6).x, np.float64)
+        assert np.linalg.norm(b - dense @ x) / np.linalg.norm(b) <= 5e-6
+
+
 def test_jacobi_rejects_zero_diagonal():
     from repro.core.formats import dense_to_csr
 
@@ -341,6 +363,32 @@ def test_sharded_matvec_parts_cover_all_rows():
         assert prev_hi == lo
     gathered = np.concatenate([np.asarray(p) for p, _, _ in parts])
     np.testing.assert_array_equal(gathered, sharded.matvec(x))
+
+
+def test_engine_options_rejected_with_prebuilt_executor():
+    """backend=/engine kwargs alongside a prebuilt executor would be
+    silently ignored (the engine already fixed them) — reject loudly."""
+    csr = spd(60, 4, 0.6)(seed=37)
+    eng = get_engine(csr, backend="reference")
+    b = _rhs(60, 38)
+    with pytest.raises(ValueError, match="prebuilt"):
+        cg(eng, b, backend="pallas")
+    with pytest.raises(ValueError, match="prebuilt"):
+        pagerank(eng, window=512)
+    assert cg(eng, b, tol=1e-6).converged  # backend='auto', no kwargs: OK
+
+
+def test_host_and_device_loops_agree_on_dtype():
+    """loop='host' and loop='while' draw their working dtype from the same
+    source (JAX's default real dtype), so they agree under x64 too."""
+    adj = powerlaw(120, 4)(seed=39)
+    eng = get_engine(transition_matrix(adj), backend="reference")
+    res_d = pagerank(eng, tol=1e-6, loop="while")
+    res_h = pagerank(eng, tol=1e-6, loop="host")
+    assert np.asarray(res_d.x).dtype == np.asarray(res_h.x).dtype
+    pw = power_iteration(eng, tol=1e-4, maxiter=50, loop="while")
+    ph = power_iteration(eng, tol=1e-4, maxiter=50, loop="host")
+    assert np.asarray(pw.x).dtype == np.asarray(ph.x).dtype
 
 
 def test_device_loops_rejected_without_device_matvec():
