@@ -30,6 +30,11 @@ STREAM_JITTER_TOL = 1.10
 # Same policy for the fused matmat kernel vs the vmapped per-column path at
 # k >= k_tile (where the matrix-stream amortization must win).
 MATMAT_JITTER_TOL = 1.10
+# Packed plans ship 4-byte metadata words instead of 8; the stream-level
+# reduction is below 2x only because the warp tags ship either way. 1.5x is
+# a conservative structural floor — it holds for any schedule whose tag
+# bytes stay under half its element bytes.
+PACKED_TRAFFIC_FLOOR = 1.5
 
 
 def _kernel_microbench() -> None:
@@ -97,6 +102,113 @@ def _backend_parity_check() -> dict:
             f"n={sell.n_rows};max_abs_err={err:.2e};tol={PARITY_TOL:.0e}",
         )
     return errors
+
+
+def _packed_plan_smoke() -> dict:
+    """Packed-metadata plan rows + the packing gates.
+
+    For each smoke matrix, build the same pallas plan under both metadata
+    encodings and report: bytes/element each encoding ships, the measured
+    metadata-stream reduction (packed plans carry the warp id and the
+    16-bit element offset in one int32 word), the perf model's
+    mem_util/traffic-ratio under each encoding, and packed-vs-unpacked
+    kernel parity for both the SpMV and the fused matmat path. The packed
+    engine runs the double-buffered (depth=2) kernel and the unpacked one
+    the classic depth=1 pipeline, so the parity gate also crosses the two
+    kernel data paths."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import SpMVEngine
+    from repro.core.formats import csr_to_sell
+    from repro.core.matrices import banded, powerlaw, random_uniform
+    from .common import emit
+
+    smoke = (
+        ("banded-512", banded(512, 16, 0.7)),
+        ("powerlaw-512", powerlaw(512, 8)),
+        ("random-256", random_uniform(256, 12)),
+    )
+    out: dict = {}
+    for name, gen in smoke:
+        csr = gen(np.random.default_rng(0))
+        sell = csr_to_sell(csr)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal(sell.n_cols).astype(np.float32))
+        X = jnp.asarray(
+            rng.standard_normal((sell.n_cols, 8)).astype(np.float32)
+        )
+        packed_eng = SpMVEngine(sell, backend="pallas", packed=True,
+                                buffer_depth=2)
+        unpacked_eng = SpMVEngine(sell, backend="pallas", packed=False,
+                                  buffer_depth=1)
+        meta = packed_eng.plan_report()["metadata"]
+        err_mv = float(np.abs(
+            np.asarray(packed_eng.matvec(x))
+            - np.asarray(unpacked_eng.matvec(x))
+        ).max())
+        err_mm = float(np.abs(
+            np.asarray(packed_eng.matmat(X))
+            - np.asarray(unpacked_eng.matmat(X))
+        ).max())
+        emit(
+            f"packed/plan/{name}", 0.0,
+            f"n={sell.n_rows};bytes_per_elem={meta['meta_bytes_per_element']}"
+            f";bytes_packed={meta['meta_bytes_packed']}"
+            f";bytes_unpacked={meta['meta_bytes_unpacked']}"
+            f";traffic_reduction={meta['traffic_reduction']:.3f}"
+            f";mem_util_packed={meta['mem_util_packed']:.4f}"
+            f";mem_util_unpacked={meta['mem_util_unpacked']:.4f}"
+            f";parity_matvec={err_mv:.2e};parity_matmat={err_mm:.2e}",
+        )
+        out[name] = {
+            "n": sell.n_rows,
+            "packable": meta["packable"],
+            "meta_bytes_per_element": meta["meta_bytes_per_element"],
+            "meta_bytes_per_element_unpacked": 8,
+            "meta_bytes_packed": meta["meta_bytes_packed"],
+            "meta_bytes_unpacked": meta["meta_bytes_unpacked"],
+            "traffic_reduction": round(meta["traffic_reduction"], 4),
+            "mem_util_packed": round(meta["mem_util_packed"], 5),
+            "mem_util_unpacked": round(meta["mem_util_unpacked"], 5),
+            "traffic_ratio_packed": round(meta["traffic_ratio_packed"], 5),
+            "traffic_ratio_unpacked": round(
+                meta["traffic_ratio_unpacked"], 5
+            ),
+            "parity_matvec": err_mv,
+            "parity_matmat": err_mm,
+        }
+    return out
+
+
+def _packed_gate(packed: dict) -> dict:
+    """Packed-plan failures, empty when clean: every smoke schedule must be
+    packable and actually ship 4-byte words, the measured metadata-stream
+    reduction must clear the structural floor, the model must credit the
+    narrower stream with better-or-equal mem_util, and the packed kernels
+    must agree with the unpacked ones within PARITY_TOL on both paths. (NaN
+    comparisons are written to fail, as in the other gates.)"""
+    bad = {}
+    for name, row in packed.items():
+        if not row["packable"]:
+            bad[f"packed-{name}-packable"] = row["packable"]
+        if row["meta_bytes_per_element"] != 4:
+            bad[f"packed-{name}-bytes-per-elem"] = \
+                row["meta_bytes_per_element"]
+        if not (row["traffic_reduction"] >= PACKED_TRAFFIC_FLOOR):
+            bad[f"packed-{name}-traffic-reduction"] = \
+                row["traffic_reduction"]
+        # packing shrinks off-chip traffic against the same ideal; mem_util
+        # (achieved bandwidth) legitimately drops when compute-bound, so the
+        # ordered gate is on traffic ratio, not utilization
+        if not (row["traffic_ratio_packed"] <= row["traffic_ratio_unpacked"]):
+            bad[f"packed-{name}-traffic-ratio"] = (
+                row["traffic_ratio_packed"], row["traffic_ratio_unpacked"]
+            )
+        if not (row["parity_matvec"] <= PARITY_TOL):
+            bad[f"packed-{name}-parity-matvec"] = row["parity_matvec"]
+        if not (row["parity_matmat"] <= PARITY_TOL):
+            bad[f"packed-{name}-parity-matmat"] = row["parity_matmat"]
+    return bad
 
 
 def _sharded_smoke() -> dict:
@@ -661,11 +773,13 @@ def main() -> None:
     if args.smoke or args.stream or args.matmat or args.solve:
         parity: dict = {}
         sharded = None
+        packed_plans = None
         if args.smoke:
             fig5_spmv.run()
             engine_cache.run()
             _kernel_microbench()
             parity = _backend_parity_check()
+            packed_plans = _packed_plan_smoke()
             sharded = _sharded_smoke()
         stream = _streaming_smoke() if args.stream else None
         matmat = _matmat_smoke() if args.matmat else None
@@ -681,6 +795,7 @@ def main() -> None:
                 "total_s": round(total_s, 1),
                 "parity_tol": PARITY_TOL,
                 "backend_parity": parity,
+                "packed_plans": packed_plans,
                 "sharded": sharded,
                 # The caches this pass observed: regressions in plan reuse
                 # (built creeping above the matrix count, disk_rejects,
@@ -698,6 +813,7 @@ def main() -> None:
             # NaN must fail too, hence the negated <= rather than a >.
             if not (sharded["max_abs_err"] <= PARITY_TOL):
                 bad["sharded-vs-single-device"] = sharded["max_abs_err"]
+            bad.update(_packed_gate(packed_plans))
         if stream is not None:
             stream_payload = {
                 "scale": os.environ.get("BENCH_SCALE", "ci"),

@@ -32,6 +32,16 @@ import numpy as np
 
 SENTINEL = jnp.iinfo(jnp.int32).max
 
+#: 16-bit halfword bound for the packed (warp << 16 | offset) plan encoding:
+#: a schedule packs losslessly iff both elem_warp and elem_offset stay below
+#: this (see `packable_schedule` / kernels.sell_spmv.build_device_plan).
+PACK_LIMIT = 1 << 16
+
+#: Metadata bytes per trace element each DevicePlan encoding ships: one int32
+#: word packed, two (warp + offset) unpacked.
+META_BYTES_PACKED = 4
+META_BYTES_UNPACKED = 8
+
 
 # ---------------------------------------------------------------------------
 # 1. Step-exact CSHR reference (ground truth for tests)
@@ -251,6 +261,27 @@ def trim_schedule_warps(schedule: BlockSchedule) -> BlockSchedule:
     if used >= schedule.max_warps:
         return schedule
     return dataclasses.replace(schedule, tags=schedule.tags[:, :used])
+
+
+def packable_schedule(schedule: BlockSchedule) -> bool:
+    """True iff this schedule's metadata fits the packed 16/16-bit encoding.
+
+    `elem_warp < max_warps` (warp ids index tag columns) and `elem_offset <
+    block_rows` (offsets index within a wide block), so the geometry bounds
+    are sufficient — no element scan needed. Trimming (`trim_schedule_warps`)
+    helps here: a schedule planned with the always-safe `max_warps=window`
+    default can exceed the limit on paper while its *trimmed* form packs."""
+    return schedule.max_warps <= PACK_LIMIT and schedule.block_rows <= PACK_LIMIT
+
+
+def schedule_meta_bytes(schedule: BlockSchedule, *, packed: bool) -> int:
+    """Total device metadata bytes a kernel streams for this schedule: the
+    per-window tag matrix plus one (packed) or two (unpacked) int32 words per
+    trace element. This is the numerator of the packed-traffic term in
+    `core.perfmodel` and of `plan_report()["metadata"]`."""
+    per_elem = META_BYTES_PACKED if packed else META_BYTES_UNPACKED
+    n_elems = schedule.n_windows * schedule.window
+    return int(schedule.tags.size) * 4 + n_elems * per_elem
 
 
 def resolve_schedule(

@@ -53,8 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .coalescer import coalesce_stats
-from .engine import DEFAULT_COLS_PER_CHUNK, DEFAULT_K_TILE, get_engine, \
-    resolve_backend
+from .engine import DEFAULT_BUFFER_DEPTH, DEFAULT_COLS_PER_CHUNK, \
+    DEFAULT_K_TILE, get_engine, resolve_backend
 from .formats import CSRMatrix, SELLMatrix
 from .perfmodel import matmat_spmv_perf, streaming_spmv_perf
 from .runtime import column_groups, data_model_grid, device_put_rhs, \
@@ -140,7 +140,8 @@ class ShardedSpMVEngine:
     round-robin shards over the mesh rows.
 
     All plan parameters (``window``, ``block_rows``, ``backend``,
-    ``cols_per_chunk``, ``k_tile``, ``matmat_mode``, ``cache_dir``) are
+    ``cols_per_chunk``, ``k_tile``, ``matmat_mode``, ``packed``,
+    ``buffer_depth``, ``cache_dir``) are
     forwarded to every shard's `SpMVEngine`, so backends, window resolution,
     the fused multi-column matmat routing, the content-addressed schedule
     cache, and npz persistence all behave exactly as on the single-device
@@ -162,6 +163,8 @@ class ShardedSpMVEngine:
         cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
         k_tile: int = DEFAULT_K_TILE,
         matmat_mode: str = "auto",
+        packed: Union[bool, str] = "auto",
+        buffer_depth: int = DEFAULT_BUFFER_DEPTH,
         cache_dir: Optional[str] = None,
     ):
         sell = normalize_to_sell(
@@ -194,6 +197,8 @@ class ShardedSpMVEngine:
                 cols_per_chunk=cols_per_chunk,
                 k_tile=k_tile,
                 matmat_mode=matmat_mode,
+                packed=packed,
+                buffer_depth=buffer_depth,
                 cache_dir=cache_dir,
             )
             for shard, _, _ in self._shards

@@ -68,8 +68,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import schedule_store
-from .coalescer import BlockSchedule, build_block_schedule, coalesce_stats, \
-    schedule_gather_reference, trim_schedule_warps
+from .coalescer import BlockSchedule, META_BYTES_PACKED, \
+    META_BYTES_UNPACKED, build_block_schedule, coalesce_stats, \
+    packable_schedule, schedule_gather_reference, schedule_meta_bytes, \
+    trim_schedule_warps
 from .formats import CSRMatrix, SELLMatrix
 from .perfmodel import DEFAULT_HW, HWConfig, matmat_spmv_perf, spmv_perf, \
     streaming_spmv_perf
@@ -80,7 +82,22 @@ BACKEND_ENV = "REPRO_BACKEND"
 DEFAULT_WINDOW = 256
 DEFAULT_COLS_PER_CHUNK = 8
 DEFAULT_K_TILE = 8
+# Kernel-pipeline default; must match kernels.sell_spmv.DEFAULT_BUFFER_DEPTH
+# (core stays importable before the kernels package, so no import here).
+DEFAULT_BUFFER_DEPTH = 2
 MATMAT_MODES = ("fused", "vmapped", "auto")
+PACKED_CHOICES = (True, False, "auto")
+
+
+def resolve_packed(packed: Union[bool, str], schedule: BlockSchedule) -> bool:
+    """The engine-level packing rule, shared with `plan_report`: ``"auto"``
+    packs whenever the schedule's geometry fits the 16/16-bit encoding
+    (`coalescer.packable_schedule`), an explicit bool is honored as-is
+    (``True`` on an unpackable geometry raises at plan-build time in
+    `kernels.sell_spmv.build_device_plan`)."""
+    if packed == "auto":
+        return packable_schedule(schedule)
+    return bool(packed)
 
 
 def resolve_backend(backend: str) -> str:
@@ -496,6 +513,8 @@ class SpMVEngine:
         cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
         k_tile: int = DEFAULT_K_TILE,
         matmat_mode: str = "auto",
+        packed: Union[bool, str] = "auto",
+        buffer_depth: int = DEFAULT_BUFFER_DEPTH,
         plan_width_multiple: Optional[int] = None,
         cache_dir: Optional[str] = None,
     ):
@@ -511,6 +530,16 @@ class SpMVEngine:
         self.k_tile = int(k_tile)
         if self.k_tile < 1:
             raise ValueError(f"k_tile must be >= 1, got {k_tile}")
+        if packed not in PACKED_CHOICES:
+            raise ValueError(
+                f"packed must be one of {PACKED_CHOICES}, got {packed!r}"
+            )
+        self.packed = packed  # as requested; resolved against the schedule
+        self.buffer_depth = int(buffer_depth)
+        if self.buffer_depth < 1:
+            raise ValueError(
+                f"buffer_depth must be >= 1, got {buffer_depth}"
+            )
         self.matmat_mode = matmat_mode  # as requested
         self.matmat_mode_resolved = resolve_matmat_mode(
             matmat_mode, self.backend_resolved
@@ -653,13 +682,16 @@ class SpMVEngine:
                 cpc = self.cols_per_chunk
                 block_rows = self.block_rows
                 kt = self.k_tile
+                depth = self.buffer_depth
                 # Lower the schedule to the kernel-ready device plan exactly
                 # once; the matvec and the fused matmat kernels share it. The
                 # schedule already encodes every gather, so the column-index
                 # array is never shipped into a kernel call (colidx=None).
+                # `packed` resolves here against the real schedule geometry
+                # (auto: one int32 word per element whenever lossless).
                 plan = build_device_plan(
                     sched, n_slices=n_slices, cols_per_chunk=cpc,
-                    slice_height=H,
+                    slice_height=H, packed=self.packed,
                 )
                 self._device_plan = plan
 
@@ -671,6 +703,7 @@ class SpMVEngine:
                         cols_per_chunk=cpc,
                         block_rows=block_rows,
                         plan=plan,
+                        buffer_depth=depth,
                         interpret=interpret,
                     )
                     return y[:n_rows]
@@ -686,6 +719,7 @@ class SpMVEngine:
                             block_rows=block_rows,
                             k_tile=kt,
                             plan=plan,
+                            buffer_depth=depth,
                             interpret=interpret,
                         )
                         return Y[:n_rows]
@@ -855,6 +889,46 @@ class SpMVEngine:
                 for system in ("base", "pack0", "pack256")
             },
         }
+        if self.backend_resolved == "pallas":
+            # Metadata-encoding report: which encoding this plan ships, its
+            # bytes/element, and the model-side mem_util/traffic-ratio shift
+            # the narrower stream buys (perfmodel's packed-traffic term).
+            packed_resolved = resolve_packed(self.packed, sched)
+            bytes_packed = schedule_meta_bytes(sched, packed=True)
+            bytes_unpacked = schedule_meta_bytes(sched, packed=False)
+            perf_by_enc = {
+                enc: spmv_perf(
+                    self.sell, "pack256", hw,
+                    meta_bytes_per_elem=bpe,
+                )
+                for enc, bpe in (
+                    ("packed", META_BYTES_PACKED),
+                    ("unpacked", META_BYTES_UNPACKED),
+                )
+            }
+            report["metadata"] = {
+                "requested": self.packed,
+                "packed": packed_resolved,
+                "packable": packable_schedule(sched),
+                "buffer_depth": self.buffer_depth,
+                "meta_bytes_per_element": (
+                    META_BYTES_PACKED if packed_resolved
+                    else META_BYTES_UNPACKED
+                ),
+                "meta_bytes": schedule_meta_bytes(
+                    sched, packed=packed_resolved
+                ),
+                "meta_bytes_packed": bytes_packed,
+                "meta_bytes_unpacked": bytes_unpacked,
+                # Tags ship either way, so the stream-level reduction is
+                # slightly under the 2x element-word reduction.
+                "traffic_reduction": bytes_unpacked / bytes_packed,
+                "mem_util_packed": perf_by_enc["packed"].mem_utilization,
+                "mem_util_unpacked": perf_by_enc["unpacked"].mem_utilization,
+                "traffic_ratio_packed": perf_by_enc["packed"].traffic_ratio,
+                "traffic_ratio_unpacked":
+                    perf_by_enc["unpacked"].traffic_ratio,
+            }
         if stream is not None:
             report["streaming"] = {
                 **{key: int(v) for key, v in stream.items()},
@@ -894,6 +968,8 @@ def get_engine(
     cols_per_chunk: int = DEFAULT_COLS_PER_CHUNK,
     k_tile: int = DEFAULT_K_TILE,
     matmat_mode: str = "auto",
+    packed: Union[bool, str] = "auto",
+    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
     cache_dir: Optional[str] = None,
 ) -> SpMVEngine:
     """Engine cache: same matrix content + plan params -> same engine (and
@@ -904,17 +980,24 @@ def get_engine(
     performs, so ``window=None`` and its explicit spelling (256 for
     reference, `cols_per_chunk * slice_height` for pallas) share one engine
     instead of duplicating schedules and jit compiles — and, for pallas,
-    `cols_per_chunk` and `k_tile`, which shape its plan and its fused matmat
-    executable (the reference backend ignores both, so they stay out of its
-    key). `cache_dir` is not part of the key — it changes where a plan is
-    stored, never what it is. Thread-safe: concurrent callers with the same
-    key get the same engine object."""
+    `cols_per_chunk`, `k_tile`, `packed`, and `buffer_depth`, which shape its
+    plan encoding and its executables (the reference backend ignores them
+    all, so they stay out of its key). `packed` is keyed on the *requested*
+    spelling: ``"auto"`` and an explicit ``True`` may lower to the same
+    encoding, but resolving it needs the schedule — too expensive for a
+    cache lookup. `cache_dir` is not part of the key — it changes where a
+    plan is stored, never what it is. Thread-safe: concurrent callers with
+    the same key get the same engine object."""
     matrix = normalize_to_sell(
         matrix, slice_height=slice_height, width_multiple=width_multiple,
         validate=False,  # O(nnz) scan deferred to construction on a miss
     )
     resolved = resolve_backend(backend)
     mode_resolved = resolve_matmat_mode(matmat_mode, resolved)
+    if packed not in PACKED_CHOICES:
+        raise ValueError(
+            f"packed must be one of {PACKED_CHOICES}, got {packed!r}"
+        )
     key = (
         _sell_content_digest(matrix),
         resolve_window(
@@ -932,6 +1015,8 @@ def get_engine(
             cols_per_chunk,
             k_tile if mode_resolved == "fused" else None,
             mode_resolved,
+            packed,
+            int(buffer_depth),
         )
         if resolved == "pallas" else None,
     )
@@ -947,6 +1032,8 @@ def get_engine(
                 cols_per_chunk=cols_per_chunk,
                 k_tile=k_tile,
                 matmat_mode=matmat_mode,
+                packed=packed,
+                buffer_depth=buffer_depth,
                 cache_dir=cache_dir,
             )
             _engine_cache.put(key, eng)

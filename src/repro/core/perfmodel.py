@@ -261,15 +261,34 @@ def _llc_hit_rate(indices: np.ndarray, hw: HWConfig) -> float:
 
 
 def spmv_perf(
-    sell: SELLMatrix, system: str, hw: HWConfig = DEFAULT_HW
+    sell: SELLMatrix,
+    system: str,
+    hw: HWConfig = DEFAULT_HW,
+    *,
+    meta_bytes_per_elem: float | None = None,
 ) -> SpMVResult:
     """Model one SpMV execution (tiled SELL per Sec. II-C).
 
     system: 'base' | 'pack0' | 'pack64' | 'pack256' (pack0 == MLPnc adapter).
+
+    ``meta_bytes_per_elem`` is the packed-traffic term: the width of the
+    per-element indirect-metadata stream actually shipped to the execution
+    unit. Default (None) is the paper's raw 32-bit index stream
+    (``hw.index_bytes``); a packed `DevicePlan` ships the same 4 bytes
+    (`coalescer.META_BYTES_PACKED`, one ``warp<<16|offset`` word), while the
+    unpacked fallback ships 8 (`META_BYTES_UNPACKED`, two words) — so
+    `traffic_ratio` and `mem_utilization` reflect the chosen encoding.
+    `ideal_bytes` always keeps the raw index width: the ideal traffic is a
+    property of the problem, not of the plan encoding.
     """
     idx_stream = sell_index_stream(sell)
     nnz_p = sell.nnz_padded
     n_rows = sell.n_rows
+    meta_bpe = (
+        float(hw.index_bytes) if meta_bytes_per_elem is None
+        else float(meta_bytes_per_elem)
+    )
+    meta_bytes = nnz_p * meta_bpe
 
     # Contiguous streams (prefetcher, near-ideal efficiency): nonzeros, column
     # indices are the *index stream* (counted inside the adapter), slice ptrs,
@@ -298,9 +317,9 @@ def spmv_perf(
             hw.base_gather_cycles_per_elem
             + miss * hw.dram_latency_cycles / hw.base_gather_overlap
         )
-        # nonzero/idx streaming through the LLC (line-granular, no prefetch →
-        # exposed latency every line):
-        lines = (nz_bytes + idx_bytes) / hw.llc_line_bytes
+        # nonzero/metadata streaming through the LLC (line-granular, no
+        # prefetch → exposed latency every line):
+        lines = (nz_bytes + meta_bytes) / hw.llc_line_bytes
         stream_cycles = lines * (
             hw.llc_line_bytes / hw.channel_bytes_per_cycle
             + hw.dram_latency_cycles / 8.0  # HW line-fill MLP of 8
@@ -308,7 +327,7 @@ def spmv_perf(
         cycles = compute_cycles + gather_cycles + stream_cycles
         indirect_cycles = gather_cycles
         offchip = (
-            contiguous_bytes + idx_bytes
+            contiguous_bytes + meta_bytes
             + miss * nnz_p * hw.llc_line_bytes
         )
     else:
@@ -316,15 +335,20 @@ def spmv_perf(
         s = indirect_stream_perf(idx_stream, variant, hw)
         indirect_cycles = nnz_p / s.elems_per_cycle
         # Prefetcher overlaps DRAM work with compute; DRAM work = indirect
-        # stream (idx + elements) + contiguous streams. First-tile fill is
-        # exposed (6 equal L2 arrays -> tile = l2/6).
+        # stream (metadata + elements) + contiguous streams. First-tile fill
+        # is exposed (6 equal L2 arrays -> tile = l2/6). The indirect-stream
+        # model already charges the raw index width per element, so a wider
+        # (or narrower) metadata encoding adds its delta on the DRAM side.
         tile_bytes = hw.l2_bytes / 6
-        n_tiles = max(1.0, (nz_bytes + idx_bytes) / (2 * tile_bytes))
-        dram_cycles = indirect_cycles + contiguous_cycles
+        n_tiles = max(1.0, (nz_bytes + meta_bytes) / (2 * tile_bytes))
+        dram_cycles = (
+            indirect_cycles + contiguous_cycles
+            + (meta_bytes - idx_bytes) / hw.channel_bytes_per_cycle
+        )
         first_fill = dram_cycles / n_tiles
         cycles = max(compute_cycles, dram_cycles) + first_fill
         offchip = (
-            contiguous_bytes + idx_bytes
+            contiguous_bytes + meta_bytes
             + s.wide_elem_accesses * hw.wide_access_bytes
         )
 
@@ -388,6 +412,7 @@ def _fused_matmat_cycles(
     k: int,
     k_tile: int,
     n_tiles: float,
+    buffer_depth: int = 2,
 ) -> Tuple[float, int, int, str]:
     """The fused-kernel cycle count shared by `matmat_spmv_perf` (adapter
     variants) and `plan_matmat_cycles` (concrete plan geometry, the tuner's
@@ -395,15 +420,23 @@ def _fused_matmat_cycles(
 
     Per k-tile pass the kernel streams the matrix side once and the per-
     column side ``k_tile`` times; padded columns (k rounded up to whole
-    tiles) cost real gather traffic and real VMACs on zeros. The first-tile
-    fill of each pass is exposed, mirroring `spmv_perf`'s prefetch model."""
+    tiles) cost real gather traffic and real VMACs on zeros.
+
+    ``buffer_depth`` is the in-kernel VMEM pipeline depth: with >= 2 the
+    chunk DMA overlaps compute (``max(compute, dram)``, first-tile fill
+    exposed — mirroring `spmv_perf`'s prefetch model and the kernels'
+    double-buffered scratch path); depth 1 cannot overlap, so compute and
+    DRAM serialize (the fill is then already inside the dram term)."""
     kt = min(int(k_tile), int(k))
     n_kt = -(-int(k) // kt)
     k_pad = n_kt * kt
     dram = n_kt * matrix_pass + k_pad * gather_col
     compute = k_pad * compute_col
-    fill = n_kt * (matrix_pass + kt * gather_col) / n_tiles
-    cycles = max(compute, dram) + fill
+    if buffer_depth >= 2:
+        fill = n_kt * (matrix_pass + kt * gather_col) / n_tiles
+        cycles = max(compute, dram) + fill
+    else:
+        cycles = compute + dram
     return cycles, kt, n_kt, ("compute" if compute >= dram else "memory")
 
 
@@ -512,18 +545,28 @@ def plan_matmat_cycles(
     window: int,
     block_rows: int,
     hw: HWConfig = DEFAULT_HW,
+    meta_bytes_per_elem: float | None = None,
+    buffer_depth: int = 2,
 ) -> float:
     """Fused-matmat cycle cost of one *concrete plan geometry* — the model
     objective `core.tune` minimizes over (cols_per_chunk, block_rows,
-    k_tile). Unlike `matmat_spmv_perf`, which evaluates the paper's adapter
-    variants, this measures the coalescer on the plan's own (window,
-    block_rows): `stream` is the width-padded index stream the engine would
-    execute (so wider cols_per_chunk both widens the coalescing window and
-    pays for its padding columns), and a wide x-fetch moves ``block_rows``
-    elements."""
+    k_tile, packed, buffer_depth). Unlike `matmat_spmv_perf`, which
+    evaluates the paper's adapter variants, this measures the coalescer on
+    the plan's own (window, block_rows): `stream` is the width-padded index
+    stream the engine would execute (so wider cols_per_chunk both widens the
+    coalescing window and pays for its padding columns), and a wide x-fetch
+    moves ``block_rows`` elements.
+
+    ``meta_bytes_per_elem`` is the plan's metadata encoding width (packed
+    `DevicePlan`: `coalescer.META_BYTES_PACKED` = 4; unpacked fallback:
+    `META_BYTES_UNPACKED` = 8; default None keeps the raw ``hw.index_bytes``
+    stream). ``buffer_depth`` is the in-kernel VMEM pipeline depth — see
+    `_fused_matmat_cycles` for the overlap semantics."""
     if k < 1 or k_tile < 1:
         raise ValueError(f"k and k_tile must be >= 1, got k={k}, "
                          f"k_tile={k_tile}")
+    if buffer_depth < 1:
+        raise ValueError(f"buffer_depth must be >= 1, got {buffer_depth}")
     stream = np.asarray(stream)
     nnz_p = int(stream.size)
     wide = int(
@@ -540,10 +583,14 @@ def plan_matmat_cycles(
     )
 
     nz_bytes = nnz_p * hw.elem_bytes
-    idx_bytes = nnz_p * hw.index_bytes
+    meta_bpe = (
+        float(hw.index_bytes) if meta_bytes_per_elem is None
+        else float(meta_bytes_per_elem)
+    )
+    meta_bytes = nnz_p * meta_bpe
     ptr_bytes = (n_slices + 1) * hw.elem_bytes
     matrix_pass = (
-        nz_bytes + idx_bytes + ptr_bytes
+        nz_bytes + meta_bytes + ptr_bytes
     ) / hw.channel_bytes_per_cycle
     gather_col = (
         wide * cyc_per_access
@@ -551,10 +598,11 @@ def plan_matmat_cycles(
     )
     compute_col = nnz_p * hw.vpc_cycles_per_nnz + n_slices * 8.0
     tile_bytes = hw.l2_bytes / 6
-    n_tiles = max(1.0, (nz_bytes + idx_bytes) / (2 * tile_bytes))
+    n_tiles = max(1.0, (nz_bytes + meta_bytes) / (2 * tile_bytes))
     cycles, _, _, _ = _fused_matmat_cycles(
         matrix_pass=matrix_pass, gather_col=gather_col,
         compute_col=compute_col, k=k, k_tile=k_tile, n_tiles=n_tiles,
+        buffer_depth=buffer_depth,
     )
     return float(cycles)
 

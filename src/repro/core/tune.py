@@ -1,4 +1,5 @@
-"""Plan autotuner: search (cols_per_chunk, block_rows, k_tile) per matrix.
+"""Plan autotuner: search (cols_per_chunk, block_rows, k_tile, packed,
+buffer_depth) per matrix.
 
 The pallas plan has three coupled knobs and no hand-pickable sweet spot:
 `cols_per_chunk` sets both the coalescing window (``cols_per_chunk *
@@ -44,6 +45,7 @@ from typing import Dict, Iterable, List, Optional, Tuple, Union
 import numpy as np
 
 from . import schedule_store
+from .coalescer import META_BYTES_PACKED, META_BYTES_UNPACKED
 from .engine import SpMVEngine, _sell_content_digest, get_engine, \
     resolve_backend
 from .formats import CSRMatrix, SELLMatrix
@@ -51,17 +53,21 @@ from .perfmodel import DEFAULT_HW, HWConfig, plan_matmat_cycles
 from .runtime import normalize_to_sell, pad_width
 
 TUNE_CACHE_ENV = "REPRO_TUNE_CACHE"
-TUNE_VERSION = 1
+TUNE_VERSION = 2  # v2: packed + buffer_depth joined the space (v1 winners
+# answer a smaller question and are deliberately re-searched)
 
 # The search space: every combination is a legal plan (cols_per_chunk widens
 # the window and the width padding together; block_rows is the wide-fetch
-# granularity; k_tile the fused RHS tile). Deliberately small — the tuner is
-# rerun per matrix, and the persisted winner makes even the model-mode search
-# a one-time cost.
+# granularity; k_tile the fused RHS tile; packed toggles the 4-byte metadata
+# encoding; buffer_depth the manual VMEM pipeline depth). Deliberately small —
+# the tuner is rerun per matrix, and the persisted winner makes even the
+# model-mode search a one-time cost.
 DEFAULT_SPACE: Dict[str, Tuple[int, ...]] = {
     "cols_per_chunk": (4, 8, 16),
     "block_rows": (4, 8, 16),
     "k_tile": (4, 8, 16),
+    "packed": (0, 1),
+    "buffer_depth": (1, 2),
 }
 TUNE_MODES = ("model", "measure")
 
@@ -76,6 +82,8 @@ class TunedPlan:
     cols_per_chunk: int
     block_rows: int
     k_tile: int
+    packed: int  # 0 | 1 — int (not bool) so the space/JSON stay uniform
+    buffer_depth: int
     k: int
     backend: str  # resolved
     mode: str
@@ -137,7 +145,12 @@ def _normalize_space(
     for knob in DEFAULT_SPACE:
         values = tuple(sorted({int(v) for v in space.get(knob,
                                                          DEFAULT_SPACE[knob])}))
-        if not values or any(v < 1 for v in values):
+        if knob == "packed":
+            if not values or any(v not in (0, 1) for v in values):
+                raise ValueError(
+                    f"tune-space knob 'packed' must list ints in (0, 1), "
+                    f"got {values}")
+        elif not values or any(v < 1 for v in values):
             raise ValueError(f"tune-space knob {knob!r} must list ints >= 1, "
                              f"got {values}")
         out[knob] = values
@@ -221,6 +234,8 @@ def _load(
             cols_per_chunk=int(w["cols_per_chunk"]),
             block_rows=int(w["block_rows"]),
             k_tile=int(w["k_tile"]),
+            packed=int(w["packed"]),
+            buffer_depth=int(w["buffer_depth"]),
             k=int(w["k"]),
             backend=str(w["backend"]),
             mode=str(w["mode"]),
@@ -232,6 +247,8 @@ def _load(
             plan.cols_per_chunk not in space["cols_per_chunk"]
             or plan.block_rows not in space["block_rows"]
             or plan.k_tile not in space["k_tile"]
+            or plan.packed not in space["packed"]
+            or plan.buffer_depth not in space["buffer_depth"]
             or plan.k != int(k)
             or plan.backend != backend
             or plan.mode != mode
@@ -277,6 +294,10 @@ def _model_search(
             window=cpc * H,
             block_rows=cand["block_rows"],
             hw=hw,
+            meta_bytes_per_elem=(
+                META_BYTES_PACKED if cand["packed"] else META_BYTES_UNPACKED
+            ),
+            buffer_depth=cand["buffer_depth"],
         )
         trials += 1
         if best is None or cost < best[0]:
@@ -312,6 +333,8 @@ def _measure_search(
             cols_per_chunk=cand["cols_per_chunk"],
             block_rows=cand["block_rows"],
             k_tile=cand["k_tile"],
+            packed=bool(cand["packed"]),
+            buffer_depth=cand["buffer_depth"],
         ))
     for eng in engines:  # compile + first-touch outside the timed rounds
         jax.block_until_ready(eng.matmat(X))
@@ -341,8 +364,8 @@ def autotune(
     cache_dir: Optional[str] = None,
     hw: HWConfig = DEFAULT_HW,
 ) -> TunedPlan:
-    """Find (cols_per_chunk, block_rows, k_tile) for serving k-column
-    matmats on this matrix. Returns the cached winner when one exists —
+    """Find (cols_per_chunk, block_rows, k_tile, packed, buffer_depth) for
+    serving k-column matmats on this matrix. Returns the cached winner when one exists —
     in-memory first, then the persistent store — running zero trials; only
     a genuinely new (matrix, k, backend, mode, space) combination searches.
     """
@@ -391,6 +414,8 @@ def autotune(
         cols_per_chunk=winner["cols_per_chunk"],
         block_rows=winner["block_rows"],
         k_tile=winner["k_tile"],
+        packed=winner["packed"],
+        buffer_depth=winner["buffer_depth"],
         k=int(k),
         backend=resolved,
         mode=mode,
@@ -435,6 +460,8 @@ def get_tuned_engine(
         cols_per_chunk=plan.cols_per_chunk,
         block_rows=plan.block_rows,
         k_tile=plan.k_tile,
+        packed=bool(plan.packed),
+        buffer_depth=plan.buffer_depth,
         slice_height=slice_height,
         cache_dir=cache_dir,
     )

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from . import ref
 from .coalesced_gather import coalesced_gather_pallas
 from .sell_spmm import sell_spmm_pallas
-from .sell_spmv import sell_spmv_pallas
+from .sell_spmv import DEFAULT_BUFFER_DEPTH, sell_spmv_pallas
 
 
 def resolve_interpret(interpret: bool | None = None) -> bool:
@@ -72,6 +72,8 @@ def sell_spmv(
     max_warps: int | None = None,
     schedule=None,
     plan=None,
+    packed: bool | str | None = None,
+    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
     backend: str = "pallas",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -86,6 +88,8 @@ def sell_spmv(
         max_warps=max_warps,
         schedule=schedule,
         plan=plan,
+        packed=packed,
+        buffer_depth=buffer_depth,
         interpret=resolve_interpret(interpret),
     )
 
@@ -101,6 +105,8 @@ def sell_spmm(
     max_warps: int | None = None,
     schedule=None,
     plan=None,
+    packed: bool | str | None = None,
+    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
     backend: str = "pallas",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -118,5 +124,7 @@ def sell_spmm(
         max_warps=max_warps,
         schedule=schedule,
         plan=plan,
+        packed=packed,
+        buffer_depth=buffer_depth,
         interpret=resolve_interpret(interpret),
     )

@@ -11,17 +11,23 @@ the dense X and the one-hot extraction becomes a real MXU matmul
     onehot (window, block_rows) @ X_block (block_rows, k_tile)
         -> gathered (window, k_tile)
 
-so the tags / elem_warp / elem_offset stream and the SELL values are read
-**once per k_tile columns** instead of once per column — HBM SpMV designs
-(Serpens) and the SSSR sparse-dense argument get their bandwidth efficiency
-from exactly this amortization. A fourth grid dimension tiles wide RHS
-batches into ``k_tile``-column passes; ``k_tile`` is clamped to k so narrow
-batches never pay padding compute.
+so the metadata stream and the SELL values are read **once per k_tile
+columns** instead of once per column — HBM SpMV designs (Serpens) and the
+SSSR sparse-dense argument get their bandwidth efficiency from exactly this
+amortization. A fourth grid dimension tiles wide RHS batches into
+``k_tile``-column passes; ``k_tile`` is clamped to k so narrow batches never
+pay padding compute.
 
 Grid: ``(n_slices, n_ktiles, n_chunks, max_warps)`` — for a fixed (slice,
 k-tile) output block the (chunk, warp) dimensions iterate innermost, so the
 ``(H, k_tile)`` accumulator stays resident exactly like the matvec kernel's
 ``(H,)`` accumulator does.
+
+The matvec kernel's two bandwidth levers apply unchanged (see
+`kernels.sell_spmv`): plans may carry **packed** one-word-per-element
+metadata, and ``buffer_depth >= 2`` streams SELL values + metadata through a
+rotating VMEM scratch with explicit async copies so the next chunk's DMA
+overlaps this chunk's MXU work.
 """
 from __future__ import annotations
 
@@ -34,13 +40,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.coalescer import BlockSchedule
 
-from .sell_spmv import DevicePlan, resolve_device_plan
+from .sell_spmv import (
+    DEFAULT_BUFFER_DEPTH,
+    DevicePlan,
+    _decode_meta,
+    _meta_block_spec,
+    _validate_buffer_depth,
+    resolve_device_plan,
+)
 
 
 def _kernel(
     tags_ref,  # scalar-prefetch (n_windows, max_warps)
-    elem_warp_ref,  # (1, 1, window)
-    elem_offset_ref,  # (1, 1, window)
+    elem_meta_ref,  # (1, 1, window) packed | (1, 1, 2, window) unpacked
     values_ref,  # (1, 1, C, H)
     x_block_ref,  # (1, block_rows, k_tile) — coalesced wide fetch of X
     out_ref,  # (1, H, k_tile)
@@ -50,6 +62,7 @@ def _kernel(
     cols_per_chunk: int,
     slice_height: int,
     k_tile: int,
+    packed: bool,
 ):
     c = pl.program_id(2)
     t = pl.program_id(3)
@@ -58,8 +71,7 @@ def _kernel(
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    ew = elem_warp_ref[0, 0, :]
-    eo = elem_offset_ref[0, 0, :]
+    ew, eo = _decode_meta(elem_meta_ref[0, 0], packed=packed)
     hit = ew == t
     rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
     onehot = (hit[:, None] & (eo[:, None] == rows)).astype(x_block_ref.dtype)
@@ -74,10 +86,91 @@ def _kernel(
     out_ref[0] += jnp.sum(values_ref[0, 0][:, :, None] * g, axis=0)
 
 
+def _kernel_buffered(
+    tags_ref,  # scalar-prefetch (n_windows, max_warps)
+    elem_meta_hbm,  # full meta array, ANY memory space
+    values_hbm,  # full (n_slices, n_chunks, C, H) values, ANY memory space
+    x_block_ref,  # (1, block_rows, k_tile)
+    out_ref,  # (1, H, k_tile)
+    meta_vmem,  # (depth, window) | (depth, 2, window) scratch
+    vals_vmem,  # (depth, C, H) scratch
+    sems,  # DMA semaphores (2, depth)
+    *,
+    block_rows: int,
+    window: int,
+    cols_per_chunk: int,
+    slice_height: int,
+    k_tile: int,
+    packed: bool,
+    n_chunks: int,
+    n_ktiles: int,
+    total_chunks: int,
+    depth: int,
+):
+    """Double-buffered variant of the fused kernel: chunk passes are
+    linearized over (slice, k-tile, chunk) and their values + metadata stream
+    through a rotating `depth`-slot VMEM scratch, so the DMA for pass
+    ``g + depth - 1`` overlaps the MXU work of pass ``g``. X keeps its
+    scalar-prefetch BlockSpec exactly like the matvec kernel."""
+    s = pl.program_id(0)
+    q = pl.program_id(1)
+    c = pl.program_id(2)
+    t = pl.program_id(3)
+    g = (s * n_ktiles + q) * n_chunks + c  # linearized chunk pass
+
+    def chunk_dma(gg, slot):
+        c_g = gg % n_chunks
+        s_g = (gg // n_chunks) // n_ktiles
+        return (
+            pltpu.make_async_copy(
+                elem_meta_hbm.at[s_g, c_g], meta_vmem.at[slot],
+                sems.at[0, slot],
+            ),
+            pltpu.make_async_copy(
+                values_hbm.at[s_g, c_g], vals_vmem.at[slot], sems.at[1, slot],
+            ),
+        )
+
+    @pl.when((s == 0) & (q == 0) & (c == 0) & (t == 0))
+    def _warm_up():
+        for j in range(min(depth - 1, total_chunks)):
+            for cp in chunk_dma(j, j):
+                cp.start()
+
+    @pl.when((c == 0) & (t == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    slot = jax.lax.rem(g, depth)
+
+    @pl.when(t == 0)
+    def _stage():
+        look_ahead = g + depth - 1
+
+        @pl.when(look_ahead < total_chunks)
+        def _prefetch():
+            for cp in chunk_dma(look_ahead, jax.lax.rem(look_ahead, depth)):
+                cp.start()
+
+        for cp in chunk_dma(g, slot):
+            cp.wait()
+
+    ew, eo = _decode_meta(meta_vmem[slot], packed=packed)
+    hit = ew == t
+    rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
+    onehot = (hit[:, None] & (eo[:, None] == rows)).astype(x_block_ref.dtype)
+    gathered = jax.lax.dot(
+        onehot, x_block_ref[0], preferred_element_type=out_ref.dtype
+    )  # (window, k_tile)
+    g_vals = gathered.reshape(cols_per_chunk, slice_height, k_tile)
+    out_ref[0] += jnp.sum(vals_vmem[slot][:, :, None] * g_vals, axis=0)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "cols_per_chunk", "block_rows", "k_tile", "max_warps", "interpret",
+        "cols_per_chunk", "block_rows", "k_tile", "max_warps", "packed",
+        "buffer_depth", "interpret",
     ),
 )
 def sell_spmm_pallas(
@@ -91,6 +184,8 @@ def sell_spmm_pallas(
     max_warps: int | None = None,
     schedule: BlockSchedule | None = None,
     plan: DevicePlan | None = None,
+    packed: bool | str | None = None,
+    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns Y = A @ X, Y: (n_slices * H, k). Semantics: ref.sell_spmm_ref
@@ -102,7 +197,8 @@ def sell_spmm_pallas(
     prebuilt `schedule`/`plan` objects the matvec kernel takes are accepted —
     `core.engine.SpMVEngine` shares one `DevicePlan` between both kernels —
     and with either, `colidx` may be None (it never touches the dispatch
-    path)."""
+    path). `packed` and `buffer_depth` behave exactly as in
+    `sell_spmv_pallas`."""
     n_slices, W, H = values.shape
     if X.ndim != 2:
         raise ValueError(f"sell_spmm expects X of shape (n_cols, k), got "
@@ -116,6 +212,7 @@ def sell_spmm_pallas(
         )
     if k_tile < 1:
         raise ValueError(f"k_tile must be >= 1, got {k_tile}")
+    depth = _validate_buffer_depth(buffer_depth)
     k = int(X.shape[1])
     out_dtype = jnp.promote_types(values.dtype, X.dtype)
     if k == 0:
@@ -125,7 +222,7 @@ def sell_spmm_pallas(
     dplan = resolve_device_plan(
         colidx, n_slices=n_slices, W=W, slice_height=H,
         cols_per_chunk=cols_per_chunk, block_rows=block_rows,
-        max_warps=max_warps, schedule=schedule, plan=plan,
+        max_warps=max_warps, schedule=schedule, plan=plan, packed=packed,
     )
     vals = values.reshape(n_slices, n_chunks, cols_per_chunk, H)
 
@@ -143,33 +240,60 @@ def sell_spmm_pallas(
     def tag_of(s, q, c, t, tags):
         return (tags[s * n_chunks + c, t], 0, q)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_slices, n_ktiles, n_chunks, dplan.max_warps),
-        in_specs=[
-            pl.BlockSpec((1, 1, window), lambda s, q, c, t, tags: (s, c, 0)),
-            pl.BlockSpec((1, 1, window), lambda s, q, c, t, tags: (s, c, 0)),
-            pl.BlockSpec(
-                (1, 1, cols_per_chunk, H),
-                lambda s, q, c, t, tags: (s, c, 0, 0),
-            ),
-            pl.BlockSpec((1, block_rows, kt), tag_of),
-        ],
-        out_specs=pl.BlockSpec((1, H, kt), lambda s, q, c, t, tags: (s, 0, q)),
+    # Accumulate in the promoted dtype (bf16 values x f32 RHS -> f32
+    # accumulation), matching ref.sell_spmm_ref's natural promotion.
+    out_shape = jax.ShapeDtypeStruct((n_slices, H, k_pad), out_dtype)
+    out_spec = pl.BlockSpec((1, H, kt), lambda s, q, c, t, tags: (s, 0, q))
+    x_spec = pl.BlockSpec((1, block_rows, kt), tag_of)
+    common = dict(
+        block_rows=block_rows, window=window, cols_per_chunk=cols_per_chunk,
+        slice_height=H, k_tile=kt, packed=dplan.packed,
     )
-    out = pl.pallas_call(
-        functools.partial(
-            _kernel,
-            block_rows=block_rows,
-            window=window,
-            cols_per_chunk=cols_per_chunk,
-            slice_height=H,
-            k_tile=kt,
-        ),
-        grid_spec=grid_spec,
-        # Accumulate in the promoted dtype (bf16 values x f32 RHS -> f32
-        # accumulation), matching ref.sell_spmm_ref's natural promotion.
-        out_shape=jax.ShapeDtypeStruct((n_slices, H, k_pad), out_dtype),
-        interpret=interpret,
-    )(dplan.tags, dplan.elem_warp, dplan.elem_offset, vals, X_p)
+    if depth == 1:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_slices, n_ktiles, n_chunks, dplan.max_warps),
+            in_specs=[
+                _meta_block_spec(window, dplan.packed, rank=3),
+                pl.BlockSpec(
+                    (1, 1, cols_per_chunk, H),
+                    lambda s, q, c, t, tags: (s, c, 0, 0),
+                ),
+                x_spec,
+            ],
+            out_specs=out_spec,
+        )
+        out = pl.pallas_call(
+            functools.partial(_kernel, **common),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(dplan.tags, dplan.elem_meta, vals, X_p)
+    else:
+        meta_slot = (2, window) if not dplan.packed else (window,)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_slices, n_ktiles, n_chunks, dplan.max_warps),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                x_spec,
+            ],
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((depth, *meta_slot), jnp.int32),
+                pltpu.VMEM((depth, cols_per_chunk, H), values.dtype),
+                pltpu.SemaphoreType.DMA((2, depth)),
+            ],
+        )
+        out = pl.pallas_call(
+            functools.partial(
+                _kernel_buffered, **common,
+                n_chunks=n_chunks, n_ktiles=n_ktiles,
+                total_chunks=n_slices * n_ktiles * n_chunks, depth=depth,
+            ),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(dplan.tags, dplan.elem_meta, vals, X_p)
     return out.reshape(n_slices * H, k_pad)[:, :k]

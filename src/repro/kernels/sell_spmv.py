@@ -12,14 +12,35 @@ multiple of `cols_per_chunk`. One *window* of the indirect stream = one
 coalescing of the column-index stream.
 
 `DevicePlan` is the kernel-ready, device-resident form of a `BlockSchedule`:
-the SENTINEL-sanitized tag matrix plus the per-(slice, chunk) reshapes of
-`elem_warp`/`elem_offset`. Building it per call would re-trace that
-preprocessing into every jit (and re-upload it per trace), so plan-owning
-callers (`core.engine.SpMVEngine`) build it **once** and share it between the
-matvec kernel here and the fused matmat kernel (`kernels.sell_spmm`). With a
-prebuilt plan the column-index array itself is dead weight — the schedule
-already encodes every gather — so `colidx` may be None and stays off the
-transfer path entirely.
+the SENTINEL-sanitized tag matrix plus the per-(slice, chunk) metadata words.
+Building it per call would re-trace that preprocessing into every jit (and
+re-upload it per trace), so plan-owning callers (`core.engine.SpMVEngine`)
+build it **once** and share it between the matvec kernel here and the fused
+matmat kernel (`kernels.sell_spmm`). With a prebuilt plan the column-index
+array itself is dead weight — the schedule already encodes every gather — so
+`colidx` may be None and stays off the transfer path entirely.
+
+Two bandwidth levers live here (the ROADMAP "bandwidth roofline push"):
+
+* **Packed metadata.** The per-element (warp id, row offset) pair is the
+  kernel's indirect stream. Both values are small — `elem_warp <
+  max_warps` and `elem_offset < block_rows`, each comfortably under 2**16
+  for every practical geometry — so `build_device_plan(packed=...)` packs
+  them into a single int32 word ``(warp << 16) | offset`` per trace
+  element: 4 metadata bytes/element instead of 8, the AXI-Pack move of
+  narrowing the irregular stream to its information content. A lossless
+  unpacked fallback (two stacked int32 lanes) is selected automatically
+  when the geometry overflows the 16-bit halves; the choice is recorded
+  on the plan (`DevicePlan.packed`) and surfaced by
+  `SpMVEngine.plan_report()["metadata"]`.
+
+* **Double-buffered chunk pipelining.** With ``buffer_depth >= 2`` the
+  kernels stream SELL values + metadata through a rotating VMEM scratch
+  with explicit async copies: while chunk g computes out of slot
+  ``g % depth``, the DMA for chunk ``g + depth - 1`` fills the next slot —
+  the in-kernel analog of the host-side `StreamingExecutor` pipeline
+  (and of the paper's prefetch-overlaps-compute VPC timing).
+  ``buffer_depth=1`` keeps the classic BlockSpec-pipelined path.
 """
 from __future__ import annotations
 
@@ -31,49 +52,110 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.coalescer import BlockSchedule, SENTINEL, resolve_schedule
+from repro.core.coalescer import (
+    BlockSchedule,
+    META_BYTES_PACKED,
+    META_BYTES_UNPACKED,
+    PACK_LIMIT,
+    SENTINEL,
+    packable_schedule,
+    resolve_schedule,
+)
+
+#: Default VMEM pipeline depth for both SELL kernels: double buffering.
+DEFAULT_BUFFER_DEPTH = 2
+
+#: Upper bound on the manual VMEM pipeline depth (slots are real VMEM).
+MAX_BUFFER_DEPTH = 8
 
 
 @dataclasses.dataclass
 class DevicePlan:
     """Kernel-ready coalescer plan: what both SELL kernels actually consume.
 
-    tags:        (n_windows, max_warps) int32 — per-window wide-block ids with
-                 SENTINEL slots remapped to 0 (a SENTINEL tag is never hit by
-                 any `elem_warp`, so block 0 is a safe dummy fetch target and
-                 the scalar-prefetch index map needs no branch).
-    elem_warp:   (n_slices, n_chunks, window) int32 — `BlockSchedule.elem_warp`
-                 reshaped to the (slice, chunk) grid the kernels iterate.
-    elem_offset: (n_slices, n_chunks, window) int32 — likewise.
+    tags:      (n_windows, max_warps) int32 — per-window wide-block ids with
+               SENTINEL slots remapped to 0 (a SENTINEL tag is never hit by
+               any `elem_warp`, so block 0 is a safe dummy fetch target and
+               the scalar-prefetch index map needs no branch).
+    elem_meta: the per-element indirect-stream words, already reshaped to the
+               (slice, chunk) grid the kernels iterate.
+               packed=True  -> (n_slices, n_chunks, window) int32, each word
+                               ``(elem_warp << 16) | elem_offset``
+                               (4 metadata bytes/element);
+               packed=False -> (n_slices, n_chunks, 2, window) int32, lane 0
+                               elem_warp, lane 1 elem_offset (8 bytes/element,
+                               the lossless fallback for geometries whose
+                               warp ids or offsets overflow 16 bits).
 
-    The geometry ints ride in the pytree aux data, so a plan-carrying jit
-    call specializes on them exactly like on static arguments.
+    `elem_warp` / `elem_offset` remain available as decoding properties, so
+    schedule-level invariants can be asserted against either encoding.
+
+    The geometry ints and the `packed` flag ride in the pytree aux data, so a
+    plan-carrying jit call specializes on them exactly like on static
+    arguments.
     """
 
     tags: jnp.ndarray
-    elem_warp: jnp.ndarray
-    elem_offset: jnp.ndarray
+    elem_meta: jnp.ndarray
     window: int
     block_rows: int
     cols_per_chunk: int
     slice_height: int
     n_slices: int
     n_chunks: int
+    packed: bool
 
     @property
     def max_warps(self) -> int:
         return int(self.tags.shape[1])
 
+    @property
+    def elem_warp(self) -> jnp.ndarray:
+        """(n_slices, n_chunks, window) int32 warp ids, whatever the encoding."""
+        if self.packed:
+            return jax.lax.shift_right_logical(self.elem_meta, 16)
+        return self.elem_meta[:, :, 0, :]
+
+    @property
+    def elem_offset(self) -> jnp.ndarray:
+        """(n_slices, n_chunks, window) int32 offsets, whatever the encoding."""
+        if self.packed:
+            return jnp.bitwise_and(self.elem_meta, 0xFFFF)
+        return self.elem_meta[:, :, 1, :]
+
+    @property
+    def meta_bytes_per_element(self) -> int:
+        return META_BYTES_PACKED if self.packed else META_BYTES_UNPACKED
+
 
 jax.tree_util.register_pytree_node(
     DevicePlan,
     lambda p: (
-        (p.tags, p.elem_warp, p.elem_offset),
+        (p.tags, p.elem_meta),
         (p.window, p.block_rows, p.cols_per_chunk, p.slice_height,
-         p.n_slices, p.n_chunks),
+         p.n_slices, p.n_chunks, p.packed),
     ),
     lambda aux, children: DevicePlan(*children, *aux),
 )
+
+
+def resolve_packing(packed: bool | str, schedule: BlockSchedule) -> bool:
+    """Resolve a packing request against a schedule's geometry.
+
+    ``"auto"`` packs whenever lossless (warp ids and offsets both fit 16
+    bits); ``True`` demands packing and raises if the geometry overflows the
+    narrow encoding; ``False`` always uses the int32 fallback."""
+    if packed == "auto":
+        return packable_schedule(schedule)
+    if packed and not packable_schedule(schedule):
+        raise ValueError(
+            f"packed metadata needs elem_warp < {PACK_LIMIT} and "
+            f"elem_offset < {PACK_LIMIT}, but the schedule has "
+            f"max_warps={schedule.max_warps}, "
+            f"block_rows={schedule.block_rows}; use packed='auto' to fall "
+            f"back to the unpacked int32 encoding"
+        )
+    return bool(packed)
 
 
 def build_device_plan(
@@ -82,11 +164,16 @@ def build_device_plan(
     n_slices: int,
     cols_per_chunk: int,
     slice_height: int,
+    packed: bool | str = "auto",
 ) -> DevicePlan:
     """Lower a `BlockSchedule` to the device-resident `DevicePlan` both SELL
     kernels consume. Validates that the schedule was built for exactly this
     (slice, chunk) geometry — a plan for different geometry would silently
-    gather the wrong elements."""
+    gather the wrong elements.
+
+    `packed` selects the metadata encoding (see `resolve_packing`): the
+    default ``"auto"`` packs (warp, offset) into one int32 word per element
+    whenever that is lossless and falls back to two full words otherwise."""
     window = int(cols_per_chunk) * int(slice_height)
     if schedule.window != window:
         raise ValueError(
@@ -100,20 +187,30 @@ def build_device_plan(
             f"tile {n_slices} slices"
         )
     n_chunks = schedule.n_windows // n_slices
+    use_packed = resolve_packing(packed, schedule)
+    ew = jnp.asarray(schedule.elem_warp, jnp.int32).reshape(
+        n_slices, n_chunks, window
+    )
+    eo = jnp.asarray(schedule.elem_offset, jnp.int32).reshape(
+        n_slices, n_chunks, window
+    )
+    if use_packed:
+        # Both halves fit 16 bits; the shift may carry into the sign bit
+        # (warp >= 2**15), which is why every decode site uses a *logical*
+        # right shift.
+        elem_meta = jnp.bitwise_or(jnp.left_shift(ew, 16), eo)
+    else:
+        elem_meta = jnp.stack([ew, eo], axis=2)
     return DevicePlan(
         tags=jnp.where(schedule.tags == SENTINEL, 0, schedule.tags),
-        elem_warp=jnp.asarray(schedule.elem_warp).reshape(
-            n_slices, n_chunks, window
-        ),
-        elem_offset=jnp.asarray(schedule.elem_offset).reshape(
-            n_slices, n_chunks, window
-        ),
+        elem_meta=elem_meta,
         window=window,
         block_rows=int(schedule.block_rows),
         cols_per_chunk=int(cols_per_chunk),
         slice_height=int(slice_height),
         n_slices=int(n_slices),
         n_chunks=int(n_chunks),
+        packed=use_packed,
     )
 
 
@@ -128,6 +225,7 @@ def resolve_device_plan(
     max_warps: int | None,
     schedule: BlockSchedule | None,
     plan: DevicePlan | None,
+    packed: bool | str | None = None,
 ) -> DevicePlan:
     """Shared plan resolution for both SELL kernels: a prebuilt `plan` wins
     (validated against the call geometry), else a prebuilt `schedule` is
@@ -135,7 +233,8 @@ def resolve_device_plan(
     required). The geometry of record is the *values* array's — a `colidx`
     that disagrees with it (e.g. an unpadded index array next to
     width-padded values) must raise, not plan a schedule that indexes out
-    of the grid."""
+    of the grid. `packed` (None == "auto") picks the metadata encoding when
+    the plan is built here; a prebuilt plan must already match it."""
     n_chunks = W // cols_per_chunk
     if colidx is not None and tuple(colidx.shape) != (
         n_slices, W, slice_height
@@ -164,6 +263,12 @@ def resolve_device_plan(
             raise ValueError(
                 f"device plan was built for block_rows={plan.block_rows}, "
                 f"call expects block_rows={block_rows}"
+            )
+        if packed not in (None, "auto") and bool(packed) != plan.packed:
+            raise ValueError(
+                f"device plan was built with packed={plan.packed}, call "
+                f"expects packed={bool(packed)}; rebuild the plan "
+                f"(build_device_plan) to change the metadata encoding"
             )
         return plan
     if schedule is None:
@@ -195,13 +300,39 @@ def resolve_device_plan(
         n_slices=n_slices,
         cols_per_chunk=cols_per_chunk,
         slice_height=slice_height,
+        packed="auto" if packed is None else packed,
     )
+
+
+def _decode_meta(meta, *, packed: bool):
+    """Split one chunk's metadata into (elem_warp, elem_offset).
+
+    `meta` is (window,) int32 when packed, (2, window) int32 otherwise. The
+    packed decode must be a *logical* shift: warp ids >= 2**15 set the int32
+    sign bit and an arithmetic shift would smear it."""
+    if packed:
+        ew = jax.lax.shift_right_logical(meta, 16)
+        eo = jnp.bitwise_and(meta, 0xFFFF)
+    else:
+        ew = meta[0]
+        eo = meta[1]
+    return ew, eo
+
+
+def _validate_buffer_depth(buffer_depth: int) -> int:
+    depth = int(buffer_depth)
+    if not 1 <= depth <= MAX_BUFFER_DEPTH:
+        raise ValueError(
+            f"buffer_depth must be in [1, {MAX_BUFFER_DEPTH}] (1 = classic "
+            f"BlockSpec pipeline, >= 2 = manual double buffering), got "
+            f"{buffer_depth}"
+        )
+    return depth
 
 
 def _kernel(
     tags_ref,  # scalar-prefetch (n_windows, max_warps)
-    elem_warp_ref,  # (1, 1, window)
-    elem_offset_ref,  # (1, 1, window)
+    elem_meta_ref,  # (1, 1, window) packed | (1, 1, 2, window) unpacked
     values_ref,  # (1, 1, C, H)
     x_block_ref,  # (1, block_rows) — coalesced wide fetch of x
     out_ref,  # (1, H)
@@ -210,6 +341,7 @@ def _kernel(
     window: int,
     cols_per_chunk: int,
     slice_height: int,
+    packed: bool,
 ):
     c = pl.program_id(1)
     t = pl.program_id(2)
@@ -218,8 +350,7 @@ def _kernel(
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    ew = elem_warp_ref[0, 0, :]
-    eo = elem_offset_ref[0, 0, :]
+    ew, eo = _decode_meta(elem_meta_ref[0, 0], packed=packed)
     hit = ew == t
     rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
     onehot = (hit[:, None] & (eo[:, None] == rows)).astype(x_block_ref.dtype)
@@ -232,9 +363,111 @@ def _kernel(
     out_ref[0, :] += jnp.sum(values_ref[0, 0] * g, axis=0)
 
 
+def _kernel_buffered(
+    tags_ref,  # scalar-prefetch (n_windows, max_warps)
+    elem_meta_hbm,  # full meta array, ANY memory space
+    values_hbm,  # full (n_slices, n_chunks, C, H) values, ANY memory space
+    x_block_ref,  # (1, block_rows) — coalesced wide fetch of x
+    out_ref,  # (1, H)
+    meta_vmem,  # (depth, window) | (depth, 2, window) scratch
+    vals_vmem,  # (depth, C, H) scratch
+    sems,  # DMA semaphores (2, depth)
+    *,
+    block_rows: int,
+    window: int,
+    cols_per_chunk: int,
+    slice_height: int,
+    packed: bool,
+    n_chunks: int,
+    total_chunks: int,
+    depth: int,
+):
+    """Double-buffered variant: SELL values + metadata stream through a
+    rotating `depth`-slot VMEM scratch with explicit async copies, so the DMA
+    for chunk ``g + depth - 1`` overlaps the compute of chunk ``g`` (the
+    kernel-level analog of the host-side StreamingExecutor pipeline). Scratch
+    persists across sequential grid steps; x keeps its scalar-prefetch
+    BlockSpec and is pipelined by pallas as before."""
+    s = pl.program_id(0)
+    c = pl.program_id(1)
+    t = pl.program_id(2)
+    g = s * n_chunks + c  # linearized chunk index across slices
+
+    def chunk_dma(gg, slot):
+        s_g = gg // n_chunks
+        c_g = gg % n_chunks
+        return (
+            pltpu.make_async_copy(
+                elem_meta_hbm.at[s_g, c_g], meta_vmem.at[slot],
+                sems.at[0, slot],
+            ),
+            pltpu.make_async_copy(
+                values_hbm.at[s_g, c_g], vals_vmem.at[slot], sems.at[1, slot],
+            ),
+        )
+
+    @pl.when((s == 0) & (c == 0) & (t == 0))
+    def _warm_up():
+        # Fill the first depth-1 slots before any compute waits on them.
+        for j in range(min(depth - 1, total_chunks)):
+            for cp in chunk_dma(j, j):
+                cp.start()
+
+    @pl.when((c == 0) & (t == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    slot = jax.lax.rem(g, depth)
+
+    @pl.when(t == 0)
+    def _stage():
+        look_ahead = g + depth - 1
+
+        @pl.when(look_ahead < total_chunks)
+        def _prefetch():
+            # Slot (g - 1) % depth: its chunk finished computing last step.
+            for cp in chunk_dma(look_ahead, jax.lax.rem(look_ahead, depth)):
+                cp.start()
+
+        for cp in chunk_dma(g, slot):
+            cp.wait()
+
+    ew, eo = _decode_meta(meta_vmem[slot], packed=packed)
+    hit = ew == t
+    rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
+    onehot = (hit[:, None] & (eo[:, None] == rows)).astype(x_block_ref.dtype)
+    gathered = jax.lax.dot(
+        onehot, x_block_ref[0, :][:, None], preferred_element_type=out_ref.dtype
+    )[:, 0]
+    g_vals = gathered.reshape(cols_per_chunk, slice_height)
+    out_ref[0, :] += jnp.sum(vals_vmem[slot] * g_vals, axis=0)
+
+
+def _meta_block_spec(window: int, packed: bool, rank: int):
+    """BlockSpec for one chunk's metadata in the depth-1 path. `rank` is the
+    number of leading grid axes in the index map signature (2 for spmv's
+    (s, c, t), 3 for spmm's (s, q, c, t))."""
+    if rank == 2:
+        if packed:
+            return pl.BlockSpec((1, 1, window), lambda s, c, t, tags: (s, c, 0))
+        return pl.BlockSpec(
+            (1, 1, 2, window), lambda s, c, t, tags: (s, c, 0, 0)
+        )
+    if packed:
+        return pl.BlockSpec(
+            (1, 1, window), lambda s, q, c, t, tags: (s, c, 0)
+        )
+    return pl.BlockSpec(
+        (1, 1, 2, window), lambda s, q, c, t, tags: (s, c, 0, 0)
+    )
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("cols_per_chunk", "block_rows", "max_warps", "interpret"),
+    static_argnames=(
+        "cols_per_chunk", "block_rows", "max_warps", "packed",
+        "buffer_depth", "interpret",
+    ),
 )
 def sell_spmv_pallas(
     colidx: jnp.ndarray | None,  # (n_slices, W, H) int32, or None with a plan
@@ -246,6 +479,8 @@ def sell_spmv_pallas(
     max_warps: int | None = None,
     schedule: BlockSchedule | None = None,
     plan: DevicePlan | None = None,
+    packed: bool | str | None = None,
+    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns y = A @ x, y: (n_slices * H,). Semantics: ref.sell_spmv_ref.
@@ -254,7 +489,13 @@ def sell_spmv_pallas(
     for repeat execution — a prebuilt `plan` (`build_device_plan`) skips
     per-call plan construction; with either, `colidx` may be None (the plan
     already encodes the whole indirect stream, so the index array never
-    touches the dispatch path)."""
+    touches the dispatch path).
+
+    `packed` picks the metadata encoding when the plan is built here
+    (None == "auto": one int32 word per element whenever lossless);
+    `buffer_depth >= 2` streams values + metadata through a rotating VMEM
+    scratch with async copies (see `_kernel_buffered`), `buffer_depth=1`
+    keeps the classic BlockSpec pipeline."""
     n_slices, W, H = values.shape
     if W % cols_per_chunk != 0:
         raise ValueError(
@@ -263,13 +504,14 @@ def sell_spmv_pallas(
             f"multiple of cols_per_chunk (core.engine.SpMVEngine with "
             f"backend='pallas' does this at planning time)"
         )
+    depth = _validate_buffer_depth(buffer_depth)
     n_chunks = W // cols_per_chunk
     window = cols_per_chunk * H
     # The indirect stream in storage order: slice-by-slice, column-major.
     dplan = resolve_device_plan(
         colidx, n_slices=n_slices, W=W, slice_height=H,
         cols_per_chunk=cols_per_chunk, block_rows=block_rows,
-        max_warps=max_warps, schedule=schedule, plan=plan,
+        max_warps=max_warps, schedule=schedule, plan=plan, packed=packed,
     )
     vals = values.reshape(n_slices, n_chunks, cols_per_chunk, H)
 
@@ -280,33 +522,61 @@ def sell_spmv_pallas(
     def tag_of(s, c, t, tags):
         return (tags[s * n_chunks + c, t], 0)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_slices, n_chunks, dplan.max_warps),
-        in_specs=[
-            pl.BlockSpec((1, 1, window), lambda s, c, t, tags: (s, c, 0)),
-            pl.BlockSpec((1, 1, window), lambda s, c, t, tags: (s, c, 0)),
-            pl.BlockSpec(
-                (1, 1, cols_per_chunk, H), lambda s, c, t, tags: (s, c, 0, 0)
-            ),
-            pl.BlockSpec((1, block_rows), tag_of),
-        ],
-        out_specs=pl.BlockSpec((1, H), lambda s, c, t, tags: (s, 0)),
-    )
-    out = pl.pallas_call(
-        functools.partial(
-            _kernel,
-            block_rows=block_rows,
-            window=window,
-            cols_per_chunk=cols_per_chunk,
-            slice_height=H,
-        ),
-        grid_spec=grid_spec,
+    out_shape = jax.ShapeDtypeStruct(
         # Accumulate in the promoted dtype (bf16 values x f32 input -> f32
         # accumulation), matching ref.sell_spmv_ref's natural promotion.
-        out_shape=jax.ShapeDtypeStruct(
-            (n_slices, H), jnp.promote_types(values.dtype, x.dtype)
-        ),
-        interpret=interpret,
-    )(dplan.tags, dplan.elem_warp, dplan.elem_offset, vals, x_p)
+        (n_slices, H), jnp.promote_types(values.dtype, x.dtype)
+    )
+    out_spec = pl.BlockSpec((1, H), lambda s, c, t, tags: (s, 0))
+    x_spec = pl.BlockSpec((1, block_rows), tag_of)
+    common = dict(
+        block_rows=block_rows, window=window, cols_per_chunk=cols_per_chunk,
+        slice_height=H, packed=dplan.packed,
+    )
+    if depth == 1:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_slices, n_chunks, dplan.max_warps),
+            in_specs=[
+                _meta_block_spec(window, dplan.packed, rank=2),
+                pl.BlockSpec(
+                    (1, 1, cols_per_chunk, H), lambda s, c, t, tags: (s, c, 0, 0)
+                ),
+                x_spec,
+            ],
+            out_specs=out_spec,
+        )
+        out = pl.pallas_call(
+            functools.partial(_kernel, **common),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(dplan.tags, dplan.elem_meta, vals, x_p)
+    else:
+        meta_slot = (2, window) if not dplan.packed else (window,)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_slices, n_chunks, dplan.max_warps),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                x_spec,
+            ],
+            out_specs=out_spec,
+            scratch_shapes=[
+                pltpu.VMEM((depth, *meta_slot), jnp.int32),
+                pltpu.VMEM((depth, cols_per_chunk, H), values.dtype),
+                pltpu.SemaphoreType.DMA((2, depth)),
+            ],
+        )
+        out = pl.pallas_call(
+            functools.partial(
+                _kernel_buffered, **common,
+                n_chunks=n_chunks, total_chunks=n_slices * n_chunks,
+                depth=depth,
+            ),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(dplan.tags, dplan.elem_meta, vals, x_p)
     return out.reshape(-1)

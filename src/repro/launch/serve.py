@@ -157,6 +157,7 @@ def serve_spmv(args) -> None:
         print(
             f"spmv-tune: cols_per_chunk={tuned.cols_per_chunk} "
             f"block_rows={tuned.block_rows} k_tile={tuned.k_tile} "
+            f"packed={tuned.packed} buffer_depth={tuned.buffer_depth} "
             f"(mode={tuned.mode}, source={tuned.source}, "
             f"trials={tuned.trials}, cost={tuned.cost:.3g}, "
             f"{time.time() - t0:.3f}s)"
@@ -166,6 +167,8 @@ def serve_spmv(args) -> None:
             block_rows=tuned.block_rows,
             cols_per_chunk=tuned.cols_per_chunk,
             k_tile=tuned.k_tile,
+            packed=bool(tuned.packed),
+            buffer_depth=tuned.buffer_depth,
         )
     t0 = time.time()
     if args.mesh:

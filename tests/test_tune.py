@@ -23,7 +23,7 @@ from repro.core.tune import (
 )
 
 SELL = csr_to_sell(banded(256, 12, 0.7)(np.random.default_rng(0)))
-N_CANDIDATES = 27  # |DEFAULT_SPACE| = 3 * 3 * 3
+N_CANDIDATES = 108  # |DEFAULT_SPACE| = 3 * 3 * 3 * 2 * 2
 
 
 @pytest.fixture(autouse=True)
@@ -176,7 +176,8 @@ def test_cache_dir_env_var_and_schedule_store_fallback(tmp_path, monkeypatch):
 def test_measure_mode_reference_backend():
     plan = autotune(
         SELL, k=4, backend="reference", mode="measure",
-        space={"cols_per_chunk": (8,), "block_rows": (4, 8), "k_tile": (8,)},
+        space={"cols_per_chunk": (8,), "block_rows": (4, 8), "k_tile": (8,),
+               "packed": (1,), "buffer_depth": (2,)},
         rounds=2,
     )
     assert plan.source == "search" and plan.mode == "measure"
@@ -189,6 +190,8 @@ def test_space_validation():
         autotune(SELL, k=4, mode="model", space={"warp_size": (32,)})
     with pytest.raises(ValueError, match=">= 1"):
         autotune(SELL, k=4, mode="model", space={"k_tile": (0,)})
+    with pytest.raises(ValueError, match="packed"):
+        autotune(SELL, k=4, mode="model", space={"packed": (2,)})
     with pytest.raises(ValueError, match="mode"):
         autotune(SELL, k=4, mode="exhaustive")
     with pytest.raises(ValueError, match="k must be"):
@@ -202,6 +205,8 @@ def test_get_tuned_engine_feeds_get_engine(tmp_path):
     )
     assert engine.block_rows == plan.block_rows
     assert engine.k_tile == plan.k_tile
+    assert engine.buffer_depth == plan.buffer_depth
+    assert engine.packed == bool(plan.packed)
     # repeat call: warm tuner (disk/memory) + warm engine cache
     engine2, plan2 = get_tuned_engine(
         SELL, k=16, backend="reference", mode="model",

@@ -1,108 +1,149 @@
-"""Hillclimb driver: lower+compile the three picked cells under candidate
-optimization configs, record per-config artifacts (tagged), print deltas.
+"""Hillclimb driver: lower+compile the picked cells under candidate
+optimization configs, record per-config artifacts (tagged), print deltas
+against the recorded 16x16 baseline.
 
-Usage: PYTHONPATH=src python tools/hillclimb.py [--phase N]
+One script, three phases (previously hillclimb.py / hillclimb2.py /
+hillclimb3.py — same driver loop, different run tables):
+
+  --phase 1  per-lever sweep: data-local MoE dispatch, ZeRO-1, full remat,
+             capacity factor, sequence-sharded attention (smollm)
+  --phase 2  EP layout constraint + FSDP param sharding
+  --phase 3  combined best levers; llama4 2D expert sharding
+
+Usage: PYTHONPATH=src python tools/hillclimb.py [--phase N] [--only ARCH]
+       [--unrolled-final]
 """
 import os
+
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
+import pathlib
 
 from repro.configs import ARCHS, SHAPES_BY_NAME
 from repro.launch.dryrun import run_cell
 from repro.models.transformer import Runtime
 
 
-def show(res, base=None):
+def _mem_gib(memory) -> float:
+    return sum(
+        memory.get(k, 0) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes",
+        )
+    ) / 2**30
+
+
+def _baseline(arch: str, shape: str):
+    f = pathlib.Path(
+        f"artifacts/dryrun/{arch}__{shape}__16x16__baseline.json"
+    )
+    return json.loads(f.read_text()) if f.exists() else None
+
+
+def show(res, base=None, *, colls=False):
     c = res.collectives.get("total_bytes", 0)
     f = res.cost.get("flops", 0)
-    m = (res.memory.get("argument_size_in_bytes", 0)
-         + res.memory.get("output_size_in_bytes", 0)
-         + res.memory.get("temp_size_in_bytes", 0)) / 2**30
+    m = _mem_gib(res.memory)
     line = (f"  {res.runtime['tag']:24s} ok={res.ok} flops={f:.3e} "
             f"coll={c:.3e} mem={m:7.1f}GiB ({res.seconds:.0f}s)")
     if base is not None and res.ok:
-        bc = base.collectives.get("total_bytes", 1) or 1
-        bm = (base.memory.get("argument_size_in_bytes", 0)
-              + base.memory.get("output_size_in_bytes", 0)
-              + base.memory.get("temp_size_in_bytes", 0)) / 2**30 or 1
-        bf = base.cost.get("flops", 1) or 1
+        bc = base["collectives"].get("total_bytes", 1) or 1
+        bf = base["cost"].get("flops", 1) or 1
+        bm = _mem_gib(base["memory"]) or 1
         line += f"  [coll x{c/bc:.3f} mem x{m/bm:.3f} flops x{f/bf:.3f}]"
     print(line, flush=True)
     if not res.ok:
         print("   ERR:", res.error[:500])
+    elif colls:
+        print("   colls:", {k: f"{v:.2e}" for k, v in
+                            res.collectives.items()})
     return res
 
 
-CELLS = {
-    "deepseek": ("deepseek-v2-lite-16b", "train_4k"),
-    "llama4": ("llama4-maverick-400b-a17b", "train_4k"),
-    "smollm": ("smollm-360m", "train_4k"),
+# Every run: (arch, shape, tag, Runtime kwargs, run_cell flags). scan_layers
+# is handled by the driver (--unrolled-final flips it off and re-tags).
+_EP = dict(moe_dp_shards=16, moe_ep_constraint=True)
+PHASES = {
+    1: [
+        # iteration 1: data-local MoE dispatch
+        ("deepseek-v2-lite-16b", "train_4k", "hc1_localdispatch",
+         dict(remat="dots", moe_dp_shards=16), {}),
+        ("llama4-maverick-400b-a17b", "train_4k", "hc1_localdispatch",
+         dict(remat="dots", moe_dp_shards=16), {}),
+        # iteration 2: + ZeRO-1 optimizer sharding
+        ("deepseek-v2-lite-16b", "train_4k", "hc2_zero1",
+         dict(remat="dots", moe_dp_shards=16), dict(zero1=True)),
+        ("llama4-maverick-400b-a17b", "train_4k", "hc2_zero1",
+         dict(remat="dots", moe_dp_shards=16), dict(zero1=True)),
+        # iteration 3: + full remat (memory term)
+        ("deepseek-v2-lite-16b", "train_4k", "hc3_rematfull",
+         dict(remat="full", moe_dp_shards=16), dict(zero1=True)),
+        ("llama4-maverick-400b-a17b", "train_4k", "hc3_rematfull",
+         dict(remat="full", moe_dp_shards=16), dict(zero1=True)),
+        # iteration 4: capacity factor 1.0 (dispatch slab size)
+        ("deepseek-v2-lite-16b", "train_4k", "hc4_cap1",
+         dict(remat="full", moe_dp_shards=16, moe_capacity_factor=1.0),
+         dict(zero1=True)),
+        ("llama4-maverick-400b-a17b", "train_4k", "hc4_cap1",
+         dict(remat="full", moe_dp_shards=16, moe_capacity_factor=1.0),
+         dict(zero1=True)),
+        # smollm iteration 1: sequence-sharded attention
+        ("smollm-360m", "train_4k", "hc1_sp",
+         dict(remat="dots", seq_shard_attention=True), {}),
+        # smollm iteration 2: + full remat (scores memory)
+        ("smollm-360m", "train_4k", "hc2_sp_rematfull",
+         dict(remat="full", seq_shard_attention=True), {}),
+        # smollm iteration 3: + zero1
+        ("smollm-360m", "train_4k", "hc3_sp_zero1",
+         dict(remat="full", seq_shard_attention=True), dict(zero1=True)),
+    ],
+    2: [
+        ("deepseek-v2-lite-16b", "train_4k", "hc5_ep",
+         dict(remat="dots", **_EP), dict(zero1=True)),
+        ("llama4-maverick-400b-a17b", "train_4k", "hc5_ep",
+         dict(remat="dots", **_EP), dict(zero1=True)),
+        ("llama4-maverick-400b-a17b", "train_4k", "hc6_ep_fsdp",
+         dict(remat="dots", **_EP), dict(zero1=True, fsdp=True)),
+        ("deepseek-v2-lite-16b", "train_4k", "hc6_ep_fsdp",
+         dict(remat="dots", **_EP), dict(zero1=True, fsdp=True)),
+    ],
+    3: [
+        # hc7: best-so-far combo + remat full + tight capacity
+        ("deepseek-v2-lite-16b", "train_4k", "hc7_combo",
+         dict(remat="full", moe_capacity_factor=1.0, **_EP),
+         dict(zero1=True)),
+        # llama4 hc7: 2D expert sharding (params+moments), EP constraint
+        ("llama4-maverick-400b-a17b", "train_4k", "hc7_expert2d",
+         dict(remat="dots", **_EP), dict(zero1=True, expert_2d=True)),
+        ("llama4-maverick-400b-a17b", "train_4k", "hc8_expert2d_rfull",
+         dict(remat="full", moe_capacity_factor=1.0, **_EP),
+         dict(zero1=True, expert_2d=True)),
+    ],
 }
-
-# (cellkey, tag, Runtime kwargs, zero1)
-CONFIGS = [
-    # iteration 1: data-local MoE dispatch
-    ("deepseek", "hc1_localdispatch",
-     dict(remat="dots", moe_dp_shards=16), False),
-    ("llama4", "hc1_localdispatch",
-     dict(remat="dots", moe_dp_shards=16), False),
-    # iteration 2: + ZeRO-1 optimizer sharding
-    ("deepseek", "hc2_zero1",
-     dict(remat="dots", moe_dp_shards=16), True),
-    ("llama4", "hc2_zero1",
-     dict(remat="dots", moe_dp_shards=16), True),
-    # iteration 3: + full remat (memory term)
-    ("deepseek", "hc3_rematfull",
-     dict(remat="full", moe_dp_shards=16), True),
-    ("llama4", "hc3_rematfull",
-     dict(remat="full", moe_dp_shards=16), True),
-    # iteration 4: capacity factor 1.0 (dispatch slab size)
-    ("deepseek", "hc4_cap1",
-     dict(remat="full", moe_dp_shards=16, moe_capacity_factor=1.0), True),
-    ("llama4", "hc4_cap1",
-     dict(remat="full", moe_dp_shards=16, moe_capacity_factor=1.0), True),
-    # smollm iteration 1: sequence-sharded attention
-    ("smollm", "hc1_sp",
-     dict(remat="dots", seq_shard_attention=True), False),
-    # smollm iteration 2: + full remat (scores memory)
-    ("smollm", "hc2_sp_rematfull",
-     dict(remat="full", seq_shard_attention=True), False),
-    # smollm iteration 3: + zero1
-    ("smollm", "hc3_sp_zero1",
-     dict(remat="full", seq_shard_attention=True), True),
-]
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--phase", type=int, default=1,
+                    choices=sorted(PHASES))
+    ap.add_argument("--only", type=str, default=None,
+                    help="run only configs whose arch id contains this")
     ap.add_argument("--unrolled-final", action="store_true")
     args = ap.parse_args()
 
-    bases = {}
-    for key, (arch, shape) in CELLS.items():
-        import pathlib
-        f = pathlib.Path(f"artifacts/dryrun/{arch}__{shape}__16x16__baseline.json")
-        bases[key] = json.loads(f.read_text()) if f.exists() else None
-
-    for key, tag, rtkw, zero1 in CONFIGS:
-        if args.only and args.only != key:
+    for arch, shape, tag, rtkw, flags in PHASES[args.phase]:
+        if args.only and args.only not in arch:
             continue
-        arch, shape = CELLS[key]
-        cfg = ARCHS[arch]
-        cell = SHAPES_BY_NAME[shape]
         rt = Runtime(scan_layers=not args.unrolled_final, **rtkw)
         print(f"{arch} {shape} -> {tag}", flush=True)
-        res = run_cell(cfg, cell, rt=rt, tag=tag + ("_unrolled" if args.unrolled_final else ""), zero1=zero1)
-        base = bases.get(key)
-        if base:
-            class B: pass
-            b = B(); b.collectives = base["collectives"]; b.memory = base["memory"]; b.cost = base["cost"]
-            show(res, b)
-        else:
-            show(res)
+        res = run_cell(
+            ARCHS[arch], SHAPES_BY_NAME[shape], rt=rt,
+            tag=tag + ("_unrolled" if args.unrolled_final else ""),
+            **flags,
+        )
+        show(res, _baseline(arch, shape), colls=args.phase > 1)
 
 
 if __name__ == "__main__":
