@@ -22,6 +22,7 @@ SMOKE_JSON = "BENCH_smoke.json"
 STREAM_JSON = "BENCH_stream.json"
 MATMAT_JSON = "BENCH_matmat.json"
 SOLVE_JSON = "BENCH_solve.json"
+DECODE_JSON = "BENCH_decode.json"
 # Streamed serving must not be slower than the synchronous loop. Gated on
 # the median of paired per-trial ratios (drift-cancelling); the margin
 # absorbs residual CPU jitter — a real pipelining regression blows well
@@ -667,6 +668,216 @@ def _solve_smoke() -> dict:
     return out
 
 
+def _decode_smoke() -> dict:
+    """Paged-decode rows + the serving-loop gates.
+
+    The pattern under test is `launch/serve.py --paged`: a paged KV cache
+    (models.paged_kv) whose page gathers resolve through the shared
+    `core.gather_engine` plan cache. One decode loop checks (a) backend
+    parity — the coalesced data path bit-identical to the jnp baseline,
+    pallas (interpret off-TPU) and the dense `_sdpa` cache within
+    PARITY_TOL — (b) plan reuse — the static page table means exactly one
+    schedule build on the first step and zero across the steady state —
+    and (c) shared-prefix dedup — two requests sharing prefix pages must
+    produce fewer wide-block fetches than disjoint requests, through the
+    same `plan_report` the serve loop prints."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import (
+        clear_engine_cache, clear_schedule_cache, schedule_cache_stats,
+    )
+    from repro.core.gather_engine import (
+        clear_gather_engine_cache, gather_engine_cache_stats,
+        get_gather_engine,
+    )
+    from repro.models.layers import _sdpa
+    from repro.models.paged_kv import (
+        alloc_paged, append_token, kv_plan_report, paged_attention,
+    )
+    from .common import emit, timed
+
+    B, n_kv, hd, H, block, prompt, steps = 4, 2, 8, 4, 4, 8, 6
+    max_len = prompt + steps
+    max_pages = -(-max_len // block)
+    rng = np.random.default_rng(0)
+    clear_engine_cache()
+    clear_schedule_cache()
+    clear_gather_engine_cache()
+
+    cache = alloc_paged(
+        n_pages=B * max_pages, block=block, n_kv=n_kv, hd=hd, batch=B,
+        max_len=max_len, dtype=jnp.float32,
+    )
+    dense_k = np.zeros((B, max_len, n_kv, hd), np.float32)
+    dense_v = np.zeros((B, max_len, n_kv, hd), np.float32)
+
+    def append(cache, pos):
+        k = rng.standard_normal((B, n_kv, hd)).astype(np.float32)
+        v = rng.standard_normal((B, n_kv, hd)).astype(np.float32)
+        dense_k[:, pos] = k
+        dense_v[:, pos] = v
+        return append_token(cache, jnp.asarray(k), jnp.asarray(v))
+
+    for pos in range(prompt):
+        cache = append(cache, pos)
+
+    # --- decode loop: every backend against the dense mirror each step
+    parity = {"coalesced_vs_jnp": 0.0, "pallas_vs_dense": 0.0,
+              "paged_vs_dense": 0.0}
+    builds_cold = None
+    for step in range(steps):
+        pos = prompt + step
+        cache = append(cache, pos)
+        cur = pos + 1
+        q = jnp.asarray(
+            rng.standard_normal((B, 1, H, hd)).astype(np.float32)
+        )
+        out_c = np.asarray(
+            paged_attention(q, cache, n_heads=H, backend="coalesced")
+        )
+        out_j = np.asarray(
+            paged_attention(q, cache, n_heads=H, backend="jnp")
+        )
+        out_p = np.asarray(
+            paged_attention(q, cache, n_heads=H, backend="pallas")
+        )
+        out_d = np.asarray(_sdpa(
+            q, jnp.asarray(dense_k[:, :cur]), jnp.asarray(dense_v[:, :cur]),
+            jnp.ones((B, 1, 1, cur), bool),
+        ))
+        parity["coalesced_vs_jnp"] = max(
+            parity["coalesced_vs_jnp"], float(np.abs(out_c - out_j).max())
+        )
+        parity["pallas_vs_dense"] = max(
+            parity["pallas_vs_dense"], float(np.abs(out_p - out_d).max())
+        )
+        parity["paged_vs_dense"] = max(
+            parity["paged_vs_dense"], float(np.abs(out_c - out_d).max())
+        )
+        if step == 0:
+            # all three backends share one schedule (content-addressed)
+            builds_cold = schedule_cache_stats()["built"]
+    builds_warm = schedule_cache_stats()["built"] - builds_cold
+
+    # --- steady-state throughput: warm paged attention at final cache state
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)).astype(np.float32))
+    _, us = timed(
+        lambda: paged_attention(
+            q, cache, n_heads=H, backend="coalesced"
+        ).block_until_ready(),
+        repeats=5,
+    )
+    tok_per_s = B / (us * 1e-6)
+    rep = kv_plan_report(cache)
+    emit(
+        "decode/steady_state", us,
+        f"batch={B};len={max_len};tok_per_s={tok_per_s:.1f};"
+        f"builds_cold={builds_cold};builds_warm={builds_warm};"
+        f"wide_accesses={rep['wide_accesses']}",
+    )
+    for name, err in parity.items():
+        emit(
+            f"decode/parity/{name}", 0.0,
+            f"max_abs_err={err:.2e};tol={PARITY_TOL:.0e}",
+        )
+
+    # --- shared-prefix dedup vs disjoint requests, through the same engine
+    # plan_report the serve loop prints (a page row is 256 f32 = 1KB)
+    Bp, priv, shared_n = 8, 4, 4
+    shared_tbl = np.stack([
+        np.concatenate([
+            np.arange(shared_n), shared_n + b * priv + np.arange(priv),
+        ])
+        for b in range(Bp)
+    ]).astype(np.int32)
+    disjoint_tbl = (
+        np.arange(Bp)[:, None] * (shared_n + priv)
+        + np.arange(shared_n + priv)[None, :]
+    ).astype(np.int32)
+    n_rows = Bp * (shared_n + priv)
+    window = Bp * (shared_n + priv)
+    rep_shared = get_gather_engine(
+        (n_rows, 256), shared_tbl.reshape(-1),
+        window=window, block_rows=1, backend="coalesced",
+    ).plan_report()
+    rep_disjoint = get_gather_engine(
+        (n_rows, 256), disjoint_tbl.reshape(-1),
+        window=window, block_rows=1, backend="coalesced",
+    ).plan_report()
+    dedup = {
+        "requests": Bp,
+        "shared_prefix_pages": shared_n,
+        "private_pages": priv,
+        "shared_wide": rep_shared["wide_accesses"],
+        "disjoint_wide": rep_disjoint["wide_accesses"],
+        "dedup_ratio": rep_disjoint["wide_accesses"]
+        / rep_shared["wide_accesses"],
+        "shared_coalesce_rate": round(rep_shared["coalesce_rate"], 4),
+        "model_speedup_shared": round(
+            rep_shared["gather_perf"]["speedup"], 4
+        ),
+        "model_speedup_disjoint": round(
+            rep_disjoint["gather_perf"]["speedup"], 4
+        ),
+    }
+    emit(
+        "decode/shared_prefix", 0.0,
+        f"requests={Bp};shared_wide={dedup['shared_wide']};"
+        f"disjoint_wide={dedup['disjoint_wide']};"
+        f"dedup_ratio={dedup['dedup_ratio']:.2f};"
+        f"model_speedup={dedup['model_speedup_shared']}",
+    )
+
+    return {
+        "batch": B,
+        "prompt": prompt,
+        "steps": steps,
+        "page_block": block,
+        "max_len": max_len,
+        "parity": parity,
+        "schedule_builds_cold": builds_cold,
+        "schedule_builds_warm": builds_warm,
+        "steady_state_us": round(us, 1),
+        "tokens_per_s": round(tok_per_s, 1),
+        "plan": {
+            "wide_accesses": rep["wide_accesses"],
+            "coalesce_rate": round(rep["coalesce_rate"], 4),
+            "meta_bytes_per_element":
+                rep["metadata"]["meta_bytes_per_element"],
+        },
+        "shared_prefix": dedup,
+        "gather_engine_cache": gather_engine_cache_stats(),
+    }
+
+
+def _decode_gate(decode: dict) -> dict:
+    """Paged-decode failures, empty when clean: the coalesced data path must
+    be bit-identical to the jnp gather, pallas and the paged cache itself
+    within PARITY_TOL of the dense reference; exactly one schedule build on
+    the cold step and zero in the steady state; shared-prefix requests must
+    fetch strictly fewer wide blocks than disjoint ones. (NaN comparisons
+    are written to fail, as in the other gates.)"""
+    bad = {}
+    if not (decode["parity"]["coalesced_vs_jnp"] == 0.0):
+        bad["decode-coalesced-vs-jnp"] = decode["parity"]["coalesced_vs_jnp"]
+    if not (decode["parity"]["pallas_vs_dense"] <= PARITY_TOL):
+        bad["decode-pallas-parity"] = decode["parity"]["pallas_vs_dense"]
+    if not (decode["parity"]["paged_vs_dense"] <= PARITY_TOL):
+        bad["decode-paged-vs-dense"] = decode["parity"]["paged_vs_dense"]
+    if decode["schedule_builds_cold"] != 1:
+        bad["decode-plan-cold"] = decode["schedule_builds_cold"]
+    if decode["schedule_builds_warm"] != 0:
+        bad["decode-plan-warm"] = decode["schedule_builds_warm"]
+    sp = decode["shared_prefix"]
+    if not (sp["shared_wide"] < sp["disjoint_wide"]):
+        bad["decode-shared-prefix-dedup"] = (
+            sp["shared_wide"], sp["disjoint_wide"]
+        )
+    if not (sp["dedup_ratio"] > 1.0):
+        bad["decode-dedup-ratio"] = sp["dedup_ratio"]
+    return bad
+
+
 def _solve_gate(solve: dict) -> dict:
     """Solver failures, empty when clean: CG must converge with the
     independently recomputed relative residual under 10x its tolerance;
@@ -762,15 +973,23 @@ def main() -> None:
         "plan reuse (exactly one schedule build per cold solve, zero warm; "
         "implies ci scale)",
     )
+    ap.add_argument(
+        "--decode", action="store_true",
+        help="paged-decode serving rows (models.paged_kv through the shared "
+        "core.gather_engine plan cache); writes BENCH_decode.json and gates "
+        "backend/dense parity, plan reuse (one cold schedule build, zero "
+        "steady-state), and shared-prefix wide-fetch dedup vs disjoint "
+        "requests (implies ci scale)",
+    )
     args = ap.parse_args()
-    if args.smoke or args.stream or args.matmat or args.solve:
+    if args.smoke or args.stream or args.matmat or args.solve or args.decode:
         os.environ["BENCH_SCALE"] = "ci"  # before .common reads it
 
     t0 = time.time()
     from . import common, engine_cache, fig5_spmv
 
     print("name,us_per_call,derived")
-    if args.smoke or args.stream or args.matmat or args.solve:
+    if args.smoke or args.stream or args.matmat or args.solve or args.decode:
         parity: dict = {}
         sharded = None
         packed_plans = None
@@ -784,6 +1003,7 @@ def main() -> None:
         stream = _streaming_smoke() if args.stream else None
         matmat = _matmat_smoke() if args.matmat else None
         solve = _solve_smoke() if args.solve else None
+        decode = _decode_smoke() if args.decode else None
         total_s = time.time() - t0
         bad = {k: v for k, v in parity.items() if not (v <= PARITY_TOL)}
         if args.smoke:
@@ -860,6 +1080,22 @@ def main() -> None:
                 f"pagerank cases)"
             )
             bad.update(_solve_gate(solve))
+        if decode is not None:
+            decode_payload = {
+                "scale": os.environ.get("BENCH_SCALE", "ci"),
+                "parity_tol": PARITY_TOL,
+                "decode": decode,
+                "rows": [
+                    r for r in common.rows() if r["name"].startswith("decode/")
+                ],
+            }
+            with open(DECODE_JSON, "w") as f:
+                json.dump(decode_payload, f, indent=2)
+            print(
+                f"# wrote {DECODE_JSON} ({decode['tokens_per_s']:.1f} tok/s, "
+                f"dedup_ratio {decode['shared_prefix']['dedup_ratio']:.2f})"
+            )
+            bad.update(_decode_gate(decode))
         print(f"# total {total_s:.1f}s (smoke)")
         if bad:
             print(

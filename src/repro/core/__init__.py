@@ -53,10 +53,18 @@ from .schedule_store import (  # noqa: F401
     schedule_path,
 )
 from .indirect_stream import coalesced_gather  # noqa: F401
+from .gather_engine import (  # noqa: F401
+    GatherEngine,
+    clear_gather_engine_cache,
+    gather_engine_cache_stats,
+    get_gather_engine,
+    resolve_gather_backend,
+)
 from .perfmodel import (  # noqa: F401
     DEFAULT_HW,
     HWConfig,
     adapter_area_model,
+    gather_perf,
     indirect_stream_perf,
     matmat_spmv_perf,
     plan_matmat_cycles,

@@ -1,0 +1,436 @@
+"""Row-gather execution engine: plan once, gather many.
+
+`GatherEngine` does for flat row-gather streams (paged-KV page tables, MoE
+expert assignments, embedding lookups) what `SpMVEngine` does for SELL column
+streams — it owns one index stream, plans it exactly once through the
+content-addressed schedule cache, hoists the kernel-ready `DevicePlan`, and
+hands out jit-compiled gather closures:
+
+  * Planning goes through `core.engine.cached_block_schedule`: the in-memory
+    LRU, the persistent npz store (``cache_dir=`` / ``$REPRO_SCHEDULE_CACHE``),
+    and the ``built``/``disk_*`` counters are all shared with the SpMV side —
+    one plan layer for every indirect stream in the repo, exactly the paper's
+    "one near-memory index/coalesce path" thesis.
+  * On the pallas backend the schedule lowers once per engine to a
+    `kernels.sell_spmv.DevicePlan` in the degenerate gather geometry
+    (`kernels.coalesced_gather.build_gather_plan`): the packed
+    ``(warp << 16) | offset`` metadata words and SENTINEL-sanitized tags are
+    closure constants of the compiled gather — no per-call re-lowering.
+  * `plan_report()` surfaces coalesce stats, the metadata-traffic encoding
+    report, and `perfmodel.gather_perf` — wide-block fetches deduped by CSHR
+    hits vs the uncoalesced ``table[indices]`` baseline.
+  * `get_gather_engine` is the content-addressed engine cache: the key is the
+    stream digest plus table/plan geometry, so a decode loop whose page table
+    does not change hits the same engine (and its warm jit) every step —
+    steady-state decode performs zero plan builds.
+
+The engine is deliberately table-*shape* bound, not table-*value* bound: the
+same plan serves every table of the right shape (k-pages and v-pages share
+one engine; a solver can swap tables under a fixed stream).
+
+Backends use the indirect-stream names: ``"jnp"`` (XLA gather — the
+uncoalesced baseline), ``"coalesced"`` (the jnp schedule-gather oracle,
+bitwise identical to jnp), ``"pallas"`` (the TPU kernel; interpret mode off
+TPU), ``"auto"`` (pallas on TPU, coalesced elsewhere, ``$REPRO_BACKEND``
+honored). ``"reference"`` is accepted as an alias of ``"coalesced"`` so
+engine-side spellings keep working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import schedule_store
+from .coalescer import (
+    BlockSchedule,
+    META_BYTES_PACKED,
+    META_BYTES_UNPACKED,
+    coalesce_stats,
+    packable_schedule,
+    schedule_gather_reference,
+    schedule_meta_bytes,
+)
+from .engine import (
+    DEFAULT_WINDOW,
+    PACKED_CHOICES,
+    _ENGINE_CACHE_MAX,
+    _LRUCache,
+    _bump,
+    cached_block_schedule,
+    resolve_backend,
+    resolve_packed,
+    stream_digest,
+)
+from .perfmodel import DEFAULT_HW, HWConfig, gather_perf
+
+GATHER_BACKENDS = ("jnp", "coalesced", "pallas", "auto")
+
+#: A page / expert slab / embedding row is already the wide block, so the
+#: gather default coalesces at single-row granularity (dedup across repeats).
+DEFAULT_GATHER_BLOCK_ROWS = 1
+
+
+def resolve_gather_backend(backend: str) -> str:
+    """Map a gather backend request to a concrete executor. ``"auto"``
+    follows the engine rule (``$REPRO_BACKEND``, else pallas iff on TPU) with
+    the engine's "reference" meaning the jnp schedule-gather oracle here;
+    ``"reference"`` is accepted as that same alias."""
+    if backend == "reference":
+        return "coalesced"
+    if backend not in GATHER_BACKENDS:
+        raise ValueError(
+            f"backend must be one of {GATHER_BACKENDS} (or 'reference'), "
+            f"got {backend!r}"
+        )
+    if backend == "auto":
+        return "pallas" if resolve_backend("auto") == "pallas" else "coalesced"
+    return backend
+
+
+class GatherEngine:
+    """Plan-once / gather-many row gather over the coalesced data path.
+
+    ``table_shape`` is the (rows, row_width) shape every gathered table must
+    have; ``indices`` is the *concrete* flat index stream (any integer shape,
+    flattened). Traced indices cannot be planned — the in-trace fallback
+    lives in `core.indirect_stream.coalesced_gather`.
+
+    ``window``/``block_rows`` are the paper's coalescing window W and the
+    wide-block height in table rows (default 1: one table row — a KV page,
+    an expert slab — *is* the wide block, so coalescing dedups repeats).
+    ``packed`` selects the `DevicePlan` metadata encoding for the pallas
+    backend (``"auto"`` packs whenever lossless). ``cache_dir`` enables the
+    shared persistent schedule store.
+    """
+
+    def __init__(
+        self,
+        table_shape: Tuple[int, int],
+        indices,
+        *,
+        window: Optional[int] = None,
+        block_rows: int = DEFAULT_GATHER_BLOCK_ROWS,
+        backend: str = "auto",
+        packed: Union[bool, str] = "auto",
+        max_warps: Optional[int] = None,
+        cache_dir: Optional[str] = None,
+    ):
+        if isinstance(indices, jax.core.Tracer):
+            raise TypeError(
+                "GatherEngine plans concrete index streams; inside a jit "
+                "trace use core.indirect_stream.coalesced_gather, which "
+                "falls back to in-trace resolution"
+            )
+        table_shape = tuple(int(s) for s in table_shape)
+        if len(table_shape) != 2:
+            raise ValueError(
+                f"table_shape must be (rows, row_width), got {table_shape}"
+            )
+        self.table_shape = table_shape
+        idx = np.ascontiguousarray(
+            np.asarray(indices, dtype=np.int32).reshape(-1)
+        )
+        if idx.size == 0:
+            raise ValueError("GatherEngine needs a non-empty index stream")
+        if int(idx.min()) < 0 or int(idx.max()) >= table_shape[0]:
+            raise ValueError(
+                f"indices must lie in [0, {table_shape[0]}) for "
+                f"table_shape={table_shape}; got range "
+                f"[{int(idx.min())}, {int(idx.max())}]"
+            )
+        self.indices = idx
+        self.backend = backend  # as requested ("auto" preserved for report)
+        self.backend_resolved = resolve_gather_backend(backend)
+        self.window = DEFAULT_WINDOW if window is None else int(window)
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.block_rows = int(block_rows)
+        if self.block_rows < 1:
+            raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+        if packed not in PACKED_CHOICES:
+            raise ValueError(
+                f"packed must be one of {PACKED_CHOICES}, got {packed!r}"
+            )
+        self.packed = packed  # as requested; resolved against the schedule
+        self.max_warps = max_warps
+        self.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+
+        # Planning/compilation are lazy and locked, mirroring SpMVEngine:
+        # perf/report queries pay for planning, never for compilation.
+        self._plan_lock = threading.RLock()
+        self._digest: Optional[str] = None
+        self._schedule: Optional[BlockSchedule] = None
+        self.plan_cached: Optional[bool] = None  # set when the plan resolves
+        self._device_plan = None  # kernels.sell_spmv.DevicePlan (pallas only)
+        self._gather = None
+
+    # -- planning ----------------------------------------------------------
+
+    @property
+    def n_indices(self) -> int:
+        return int(self.indices.size)
+
+    @property
+    def digest(self) -> str:
+        """Content digest of the index stream (memoized)."""
+        with self._plan_lock:
+            if self._digest is None:
+                self._digest = stream_digest(self.indices)
+            return self._digest
+
+    @property
+    def schedule(self) -> BlockSchedule:
+        """The coalescer plan (content-addressed cache; built on first use,
+        loaded from the persistent store when one is configured)."""
+        with self._plan_lock:
+            if self._schedule is None:
+                self._schedule, self.plan_cached = cached_block_schedule(
+                    self.indices,
+                    window=self.window,
+                    block_rows=self.block_rows,
+                    max_warps=self.max_warps,
+                    cache_dir=self.cache_dir,
+                )
+            return self._schedule
+
+    def persist_schedule(
+        self, cache_dir: Optional[str] = None
+    ) -> Optional[str]:
+        """Write the already-built schedule to the persistent store (no-op if
+        nothing is planned yet, no directory is configured, or the file
+        exists). Returns the file path, or None."""
+        with self._plan_lock:
+            cache_dir = schedule_store.resolve_cache_dir(
+                cache_dir if cache_dir is not None else self.cache_dir
+            )
+            if cache_dir is None or self._schedule is None:
+                return None
+            path = schedule_store.schedule_path(
+                cache_dir, self.digest, window=self.window,
+                block_rows=self.block_rows, max_warps=self.max_warps,
+            )
+            if not os.path.exists(path):
+                schedule_store.save_schedule(
+                    path, self._schedule, stream_digest=self.digest
+                )
+                _bump("disk_saves")
+            return path
+
+    @property
+    def device_plan(self):
+        """The hoisted kernel-ready `DevicePlan` (lowered exactly once; the
+        compiled pallas gather closes over it)."""
+        with self._plan_lock:
+            if self._device_plan is None:
+                from repro.kernels.coalesced_gather import build_gather_plan
+
+                self._device_plan = build_gather_plan(
+                    self.schedule, packed=self.packed
+                )
+            return self._device_plan
+
+    def _ensure_compiled(self):
+        with self._plan_lock:
+            if self._gather is None:
+                n = self.n_indices
+                if self.backend_resolved == "jnp":
+                    idx = jnp.asarray(self.indices)
+
+                    def _gather(table: jnp.ndarray) -> jnp.ndarray:
+                        return table[idx]
+
+                    self._gather = jax.jit(_gather)
+                elif self.backend_resolved == "coalesced":
+                    sched = self.schedule
+
+                    def _gather(table: jnp.ndarray) -> jnp.ndarray:
+                        return schedule_gather_reference(
+                            table, sched, n_out=n
+                        )
+
+                    self._gather = jax.jit(_gather)
+                else:  # pallas
+                    # Locals to the kernels package are lazy: core must stay
+                    # importable before kernels (which itself imports core).
+                    from repro.kernels.coalesced_gather import (
+                        coalesced_gather_pallas,
+                    )
+                    from repro.kernels.ops import resolve_interpret
+
+                    plan = self.device_plan
+                    window, block_rows = self.window, self.block_rows
+                    interpret = resolve_interpret()
+
+                    def _gather(table: jnp.ndarray) -> jnp.ndarray:
+                        # Already jitted (static plan geometry via pytree
+                        # aux); the index array never ships — the plan
+                        # encodes every gather.
+                        return coalesced_gather_pallas(
+                            table, None, window=window,
+                            block_rows=block_rows, plan=plan, n_out=n,
+                            interpret=interpret,
+                        )
+
+                    self._gather = _gather
+            return self._gather
+
+    # -- execution ---------------------------------------------------------
+
+    def gather(self, table: jnp.ndarray) -> jnp.ndarray:
+        """``table[indices]`` through the cached plan. table: `table_shape`;
+        returns (n_indices, row_width) in the table's dtype."""
+        table = jnp.asarray(table)
+        if tuple(table.shape) != self.table_shape:
+            raise ValueError(
+                f"gather expects a table of shape {self.table_shape}, got "
+                f"{tuple(table.shape)}"
+            )
+        return self._ensure_compiled()(table)
+
+    __call__ = gather
+
+    # -- introspection -----------------------------------------------------
+
+    def plan_report(
+        self,
+        hw: HWConfig = DEFAULT_HW,
+        *,
+        row_bytes: Optional[int] = None,
+    ) -> Dict[str, object]:
+        """The plan, inspectable: stream/coalescer stats, the metadata-
+        encoding report, and the `perfmodel.gather_perf` prediction (wide
+        fetches deduped by CSHR hits vs the uncoalesced ``table[indices]``
+        baseline). Forces planning. ``row_bytes`` is the modeled byte width
+        of one table row (default: ``row_width * 4``, an f32 table)."""
+        sched = self.schedule
+        wide, rate = coalesce_stats(
+            self.indices, window=self.window, block_rows=self.block_rows
+        )
+        packed_resolved = resolve_packed(self.packed, sched)
+        bytes_packed = schedule_meta_bytes(sched, packed=True)
+        bytes_unpacked = schedule_meta_bytes(sched, packed=False)
+        rb = (
+            self.table_shape[1] * 4 if row_bytes is None else int(row_bytes)
+        )
+        perf = gather_perf(
+            self.indices,
+            window=self.window,
+            block_rows=self.block_rows,
+            row_bytes=rb,
+            hw=hw,
+            meta_bytes_per_elem=(
+                META_BYTES_PACKED if packed_resolved else META_BYTES_UNPACKED
+            ),
+        )
+        return {
+            "table_shape": self.table_shape,
+            "n_indices": self.n_indices,
+            "backend": self.backend,
+            "backend_resolved": self.backend_resolved,
+            "window": self.window,
+            "block_rows": self.block_rows,
+            "n_windows": sched.n_windows,
+            "max_warps": sched.max_warps,
+            "schedule_cached": self.plan_cached,
+            "wide_accesses": wide,
+            "coalesce_rate": rate,
+            "metadata": {
+                "requested": self.packed,
+                "packed": packed_resolved,
+                "packable": packable_schedule(sched),
+                "meta_bytes_per_element": (
+                    META_BYTES_PACKED if packed_resolved
+                    else META_BYTES_UNPACKED
+                ),
+                "meta_bytes": schedule_meta_bytes(
+                    sched, packed=packed_resolved
+                ),
+                "meta_bytes_packed": bytes_packed,
+                "meta_bytes_unpacked": bytes_unpacked,
+                "traffic_reduction": bytes_unpacked / bytes_packed,
+            },
+            "gather_perf": dataclasses.asdict(perf),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed engine cache
+# ---------------------------------------------------------------------------
+
+_gather_engine_cache = _LRUCache(_ENGINE_CACHE_MAX)
+# Same single-object guarantee as engine.get_engine: one lock serializes the
+# miss path (construction is cheap — planning/compilation stay lazy).
+_gather_engine_lock = threading.RLock()
+
+
+def get_gather_engine(
+    table_shape: Tuple[int, int],
+    indices,
+    *,
+    window: Optional[int] = None,
+    block_rows: int = DEFAULT_GATHER_BLOCK_ROWS,
+    backend: str = "auto",
+    packed: Union[bool, str] = "auto",
+    max_warps: Optional[int] = None,
+    cache_dir: Optional[str] = None,
+) -> GatherEngine:
+    """Engine cache: same stream content + table/plan geometry -> same engine
+    (and therefore the same schedule object and warm jit closures). This is
+    what makes steady-state decode plan-free: `models.paged_kv.gather_kv`
+    keys on the page-table digest, and as long as the table bytes don't
+    change, every decode step lands on one engine. The key holds the
+    *resolved* backend and window (every spelling of one plan shares one
+    engine); `packed` is keyed as requested, like `get_engine`; `cache_dir`
+    changes where plans are stored, never what they are."""
+    idx = np.ascontiguousarray(np.asarray(indices, dtype=np.int32).reshape(-1))
+    resolved = resolve_gather_backend(backend)
+    key = (
+        stream_digest(idx),
+        tuple(int(s) for s in table_shape),
+        DEFAULT_WINDOW if window is None else int(window),
+        int(block_rows),
+        resolved,
+        max_warps,
+        packed if resolved == "pallas" else None,
+    )
+    adopted = None
+    with _gather_engine_lock:
+        eng = _gather_engine_cache.get(key)
+        if eng is None:
+            eng = GatherEngine(
+                table_shape,
+                idx,
+                window=window,
+                block_rows=block_rows,
+                backend=backend,
+                packed=packed,
+                max_warps=max_warps,
+                cache_dir=cache_dir,
+            )
+            _gather_engine_cache.put(key, eng)
+        elif cache_dir is not None:
+            # A directory request must not be silently dropped (same adopt-
+            # and-write-through rule as engine.get_engine).
+            eng.cache_dir = schedule_store.resolve_cache_dir(cache_dir)
+            adopted = eng
+    if adopted is not None:
+        adopted.persist_schedule()
+    return eng
+
+
+def gather_engine_cache_stats() -> Dict[str, int]:
+    return {
+        "size": len(_gather_engine_cache),
+        "hits": _gather_engine_cache.hits,
+        "misses": _gather_engine_cache.misses,
+    }
+
+
+def clear_gather_engine_cache() -> None:
+    _gather_engine_cache.clear()

@@ -8,6 +8,15 @@ stream primitive — the TPU adaptation of the paper's adapter. Backends:
   * "pallas":    the Pallas TPU kernel (kernels/coalesced_gather.py) driven by
                  the same schedule (interpret=True on CPU).
 
+This is a thin stateless wrapper over `core.gather_engine`: a *concrete*
+index stream resolves through the content-addressed `get_gather_engine`
+cache, so every backend shares one plan-resolution path and repeat streams
+(a decode loop's fixed page table, a re-looked-up embedding batch) reuse the
+cached schedule, hoisted `DevicePlan`, and warm jit closures. A *traced*
+stream (an embedding lookup inside a jitted decode step) cannot be planned
+host-side, so it falls back to in-trace resolution of the same schedule
+machinery — the only such fallback in the library.
+
 Used by: embedding lookup (models/layers.py), MoE dispatch (models/moe.py),
 paged KV gather (models/paged_kv.py), SpMV (core/spmv.py).
 """
@@ -19,9 +28,37 @@ import jax
 import jax.numpy as jnp
 
 from .coalescer import resolve_schedule, schedule_gather_reference
+from .gather_engine import get_gather_engine
 
 
 @partial(jax.jit, static_argnames=("window", "block_rows", "backend"))
+def _gather_in_trace(
+    table: jnp.ndarray,
+    flat: jnp.ndarray,
+    schedule,
+    *,
+    window: int,
+    block_rows: int,
+    backend: str,
+) -> jnp.ndarray:
+    """In-trace fallback: per-call schedule resolution for traced streams."""
+    if backend == "jnp":
+        return table[flat]
+    if backend == "coalesced":
+        sched, _ = resolve_schedule(
+            flat, window=window, block_rows=block_rows, schedule=schedule
+        )
+        return schedule_gather_reference(table, sched, n_out=flat.shape[0])
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.coalesced_gather(
+            table, flat, window=window, block_rows=block_rows,
+            schedule=schedule,
+        )
+    raise ValueError(f"unknown backend {backend!r}")
+
+
 def coalesced_gather(
     table: jnp.ndarray,
     indices: jnp.ndarray,
@@ -35,23 +72,24 @@ def coalesced_gather(
 
     window/block_rows mirror the paper's W and wide-block granularity; for
     TPU, block_rows*D*itemsize should be a multiple of the (8,128) tile.
-    A prebuilt `schedule` for the flattened index stream (see
-    core.engine.cached_block_schedule) skips per-call plan construction."""
+    Concrete index streams plan through the `gather_engine` cache (plan once,
+    gather many); a prebuilt `schedule` (core.engine.cached_block_schedule)
+    or a traced stream takes the in-trace path instead."""
+    indices = jnp.asarray(indices)
     flat = indices.reshape(-1)
-    if backend == "jnp":
-        out = table[flat]
-    elif backend == "coalesced":
-        sched, _ = resolve_schedule(
-            flat, window=window, block_rows=block_rows, schedule=schedule
+    if (
+        schedule is None
+        and flat.size > 0
+        and not isinstance(flat, jax.core.Tracer)
+    ):
+        eng = get_gather_engine(
+            tuple(table.shape), flat,
+            window=window, block_rows=block_rows, backend=backend,
         )
-        out = schedule_gather_reference(table, sched, n_out=flat.shape[0])
-    elif backend == "pallas":
-        from repro.kernels import ops as kops
-
-        out = kops.coalesced_gather(
-            table, flat, window=window, block_rows=block_rows,
-            schedule=schedule,
-        )
+        out = eng.gather(table)
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        out = _gather_in_trace(
+            table, flat, schedule,
+            window=window, block_rows=block_rows, backend=backend,
+        )
     return out.reshape(*indices.shape, table.shape[-1])

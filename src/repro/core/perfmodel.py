@@ -368,6 +368,108 @@ def spmv_perf(
 
 
 # ---------------------------------------------------------------------------
+# Row-gather streams (paged-KV page tables, MoE dispatch, embeddings)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GatherPerf:
+    """Coalesced row-gather vs the uncoalesced ``table[indices]`` baseline.
+
+    The model counterpart of `core.gather_engine.GatherEngine`: the stream is
+    a flat list of table-row indices (page tables, expert assignments, token
+    ids), a wide-block fetch moves ``block_rows`` consecutive table rows, and
+    the CSHR window policy dedups repeated blocks per window. The baseline is
+    MLPnc applied to rows: one row-granular fetch per index, no dedup."""
+
+    n_indices: int
+    row_bytes: int  # bytes per table row (D * itemsize)
+    wide_accesses: int  # coalesced: unique blocks per window (CSHR)
+    baseline_accesses: int  # uncoalesced: one fetch per index
+    dedup_rate: float  # baseline_accesses / wide_accesses (CSHR hits)
+    coalesce_rate: float  # indices served per fetched table row
+    coalesced_cycles: float
+    baseline_cycles: float
+    speedup: float  # baseline_cycles / coalesced_cycles
+    coalesced_bytes: float  # element traffic + metadata stream
+    baseline_bytes: float  # element traffic + raw index stream
+    traffic_reduction: float  # baseline_bytes / coalesced_bytes
+
+
+def gather_perf(
+    indices: np.ndarray,
+    *,
+    window: int,
+    block_rows: int = 1,
+    row_bytes: int,
+    hw: HWConfig = DEFAULT_HW,
+    meta_bytes_per_elem: float | None = None,
+) -> GatherPerf:
+    """Model one planned row-gather: wide-block fetches deduped by CSHR hits
+    (the coalescer measured on the real trace) against the uncoalesced
+    ``table[indices]`` baseline that issues one row fetch per index.
+
+    ``row_bytes`` is the byte width of one table row — for a paged-KV gather
+    that is a whole KV page, for an embedding lookup one embedding vector.
+    Both sides pay the DRAM access granularity: fetches are rounded up to
+    whole ``hw.wide_access_bytes`` beats. ``meta_bytes_per_elem`` is the
+    plan's per-element metadata width (packed `DevicePlan`: 4; unpacked: 8;
+    default None charges the raw ``hw.index_bytes`` stream, making the
+    element-side dedup the only difference between the two systems)."""
+    idx = np.asarray(indices, dtype=np.int64).reshape(-1)
+    n = int(idx.size)
+    if n == 0:
+        raise ValueError("gather_perf needs a non-empty index stream")
+    gran = hw.wide_access_bytes
+    meta_bpe = (
+        float(hw.index_bytes) if meta_bytes_per_elem is None
+        else float(meta_bytes_per_elem)
+    )
+
+    # --- coalesced side: one wide fetch per unique block per window
+    wide = int(
+        window_unique_counts(idx, window=window, block_rows=block_rows).sum()
+    )
+    block_bytes = -(-block_rows * row_bytes // gran) * gran
+    trace = _issued_block_trace(idx, window, block_rows)
+    miss = _row_miss_rate(trace, max(1, hw.row_bytes // block_bytes))
+    cyc_per_block = (
+        block_bytes / hw.channel_bytes_per_cycle
+        + hw.row_miss_penalty_cycles * miss
+    )
+    meta_cycles = n * meta_bpe / hw.channel_bytes_per_cycle
+    coalesced_cycles = wide * cyc_per_block + meta_cycles
+    coalesced_bytes = wide * block_bytes + n * meta_bpe
+
+    # --- baseline: table[indices] fetches every requested row, no dedup
+    fetch_bytes = -(-row_bytes // gran) * gran
+    base_trace = _issued_block_trace(idx, None, 1)
+    base_miss = _row_miss_rate(base_trace, max(1, hw.row_bytes // fetch_bytes))
+    cyc_per_fetch = (
+        fetch_bytes / hw.channel_bytes_per_cycle
+        + hw.row_miss_penalty_cycles * base_miss
+    )
+    idx_cycles = n * hw.index_bytes / hw.channel_bytes_per_cycle
+    baseline_cycles = n * cyc_per_fetch + idx_cycles
+    baseline_bytes = n * fetch_bytes + n * hw.index_bytes
+
+    return GatherPerf(
+        n_indices=n,
+        row_bytes=int(row_bytes),
+        wide_accesses=wide,
+        baseline_accesses=n,
+        dedup_rate=float(n / max(wide, 1)),
+        coalesce_rate=float(n / max(wide * block_rows, 1)),
+        coalesced_cycles=float(coalesced_cycles),
+        baseline_cycles=float(baseline_cycles),
+        speedup=float(baseline_cycles / coalesced_cycles),
+        coalesced_bytes=float(coalesced_bytes),
+        baseline_bytes=float(baseline_bytes),
+        traffic_reduction=float(baseline_bytes / coalesced_bytes),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Batched matmat (matrix traffic amortized over the RHS batch)
 # ---------------------------------------------------------------------------
 

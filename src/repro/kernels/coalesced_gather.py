@@ -17,6 +17,16 @@ The table block is (block_rows, D): `block_rows * D * itemsize` plays the role
 of the 512 b DRAM access granularity; on TPU it should be a multiple of the
 (8, 128) VMEM tile. MXU-aligned choices (block_rows=128, D%128==0) make the
 extraction matmul full-throughput.
+
+Like the SELL kernels, this kernel consumes a `DevicePlan` — the gather
+geometry is the degenerate SELL one (`n_slices = n_windows`, one chunk of
+`cols_per_chunk=1` x `slice_height=window` per window), so the same packed
+``(warp << 16) | offset`` metadata words and SENTINEL-sanitized tags flow
+through unchanged. Plan-owning callers (`core.gather_engine.GatherEngine`)
+build the plan **once** (`build_gather_plan`) and pass it per call; with a
+prebuilt plan the index array is dead weight (`indices=None`, the schedule
+already encodes every gather) and only `n_out` is needed to trim the padded
+output.
 """
 from __future__ import annotations
 
@@ -27,18 +37,98 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.coalescer import BlockSchedule, SENTINEL, resolve_schedule
+from repro.core.coalescer import BlockSchedule, resolve_schedule
+
+from .sell_spmv import DevicePlan, _decode_meta, build_device_plan
+
+
+def build_gather_plan(
+    schedule: BlockSchedule, *, packed: bool | str = "auto"
+) -> DevicePlan:
+    """Lower a flat-stream `BlockSchedule` to the gather kernel's `DevicePlan`.
+
+    The gather grid is (window, warp) with no slice/chunk tiling, so the plan
+    geometry is one chunk per window: ``n_slices = n_windows``,
+    ``cols_per_chunk = 1``, ``slice_height = window``."""
+    return build_device_plan(
+        schedule,
+        n_slices=schedule.n_windows,
+        cols_per_chunk=1,
+        slice_height=schedule.window,
+        packed=packed,
+    )
+
+
+def resolve_gather_plan(
+    indices: jnp.ndarray | None,
+    *,
+    window: int,
+    block_rows: int,
+    max_warps: int | None = None,
+    schedule: BlockSchedule | None = None,
+    plan: DevicePlan | None = None,
+    packed: bool | str | None = None,
+) -> DevicePlan:
+    """Shared plan resolution for the gather kernel, mirroring
+    `sell_spmv.resolve_device_plan`: a prebuilt `plan` wins (validated
+    against the call geometry), else a prebuilt `schedule` is lowered, else
+    the plan is built from `indices` (only then required)."""
+    if plan is not None:
+        if (
+            plan.window != window
+            or plan.cols_per_chunk != 1
+            or plan.n_chunks != 1
+        ):
+            raise ValueError(
+                f"gather plan was built for (window={plan.window}, "
+                f"cols_per_chunk={plan.cols_per_chunk}, "
+                f"n_chunks={plan.n_chunks}), call expects window={window} "
+                f"with the gather geometry (cols_per_chunk=1, n_chunks=1); "
+                f"rebuild with build_gather_plan"
+            )
+        if plan.block_rows != block_rows:
+            raise ValueError(
+                f"gather plan was built for block_rows={plan.block_rows}, "
+                f"call expects block_rows={block_rows}"
+            )
+        if packed not in (None, "auto") and bool(packed) != plan.packed:
+            raise ValueError(
+                f"gather plan was built with packed={plan.packed}, call "
+                f"expects packed={bool(packed)}; rebuild the plan to change "
+                f"the metadata encoding"
+            )
+        return plan
+    if indices is not None:
+        sched, _ = resolve_schedule(
+            indices.reshape(-1), window=window, block_rows=block_rows,
+            max_warps=max_warps, schedule=schedule,
+        )
+    elif schedule is not None:
+        # No stream to length-check against; geometry must still agree.
+        if schedule.window != window or schedule.block_rows != block_rows:
+            raise ValueError(
+                f"schedule was planned for (window={schedule.window}, "
+                f"block_rows={schedule.block_rows}), call expects "
+                f"(window={window}, block_rows={block_rows})"
+            )
+        sched = schedule
+    else:
+        raise ValueError(
+            "indices are required to build a plan; pass schedule= or plan= "
+            "to run without the index array"
+        )
+    return build_gather_plan(sched, packed="auto" if packed is None else packed)
 
 
 def _kernel(
     tags_ref,  # scalar-prefetch: (n_windows, max_warps) int32 (sentinel->0)
-    elem_warp_ref,  # (1, window) int32
-    elem_offset_ref,  # (1, window) int32
+    elem_meta_ref,  # (1, 1, window) packed | (1, 1, 2, window) unpacked
     table_block_ref,  # (block_rows, D) — the coalesced wide fetch
     out_ref,  # (window, D)
     *,
     block_rows: int,
     window: int,
+    packed: bool,
 ):
     t = pl.program_id(1)
 
@@ -46,8 +136,8 @@ def _kernel(
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    ew = elem_warp_ref[0, :]  # (window,)
-    eo = elem_offset_ref[0, :]  # (window,)
+    meta = elem_meta_ref[0, 0]  # (window,) packed | (2, window) unpacked
+    ew, eo = _decode_meta(meta, packed=packed)
     # Hitmap x Offsets -> one-hot extraction matrix for this request warp.
     hit = ew == t
     rows = jax.lax.broadcasted_iota(jnp.int32, (window, block_rows), 1)
@@ -57,18 +147,30 @@ def _kernel(
     )
 
 
+def _meta_block_spec(window: int, packed: bool) -> pl.BlockSpec:
+    """One chunk of plan metadata per grid step w (both encodings)."""
+    if packed:
+        return pl.BlockSpec((1, 1, window), lambda w, t, tags: (w, 0, 0))
+    return pl.BlockSpec((1, 1, 2, window), lambda w, t, tags: (w, 0, 0, 0))
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("window", "block_rows", "max_warps", "interpret"),
+    static_argnames=(
+        "window", "block_rows", "max_warps", "packed", "n_out", "interpret",
+    ),
 )
 def coalesced_gather_pallas(
     table: jnp.ndarray,
-    indices: jnp.ndarray,
+    indices: jnp.ndarray | None = None,
     *,
     window: int = 256,
     block_rows: int = 8,
     max_warps: int | None = None,
     schedule: BlockSchedule | None = None,
+    plan: DevicePlan | None = None,
+    packed: bool | str | None = None,
+    n_out: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Gather `table[indices]` through the coalesced data path.
@@ -80,35 +182,42 @@ def coalesced_gather_pallas(
     `window`); smaller values shrink the grid when the caller knows the
     stream's locality (asserted at schedule build when indices are concrete).
 
-    A prebuilt `schedule` (e.g. from core.engine.cached_block_schedule) skips
-    per-call plan construction; it must match window/block_rows.
-    """
+    A prebuilt `schedule` (core.engine.cached_block_schedule) skips per-call
+    plan construction; a prebuilt `plan` (`build_gather_plan`) additionally
+    skips the schedule->plan lowering, and then `indices` may be None —
+    `n_out` (default: the plan's padded length) trims the output."""
     R, D = table.shape
-    n = indices.shape[0]
-    sched, max_warps = resolve_schedule(
-        indices.reshape(-1), window=window, block_rows=block_rows,
-        max_warps=max_warps, schedule=schedule,
+    dplan = resolve_gather_plan(
+        indices, window=window, block_rows=block_rows, max_warps=max_warps,
+        schedule=schedule, plan=plan, packed=packed,
     )
-    n_windows = sched.n_windows
+    n_windows = dplan.n_slices
+    if n_out is None:
+        n_out = indices.shape[0] if indices is not None else n_windows * window
+    if not 0 <= n_out <= n_windows * window:
+        raise ValueError(
+            f"n_out={n_out} does not fit the plan's {n_windows} windows of "
+            f"{window} ({n_windows * window} padded elements)"
+        )
     # Pad table to whole blocks.
     n_blocks = -(-R // block_rows)
     table_p = jnp.pad(table, ((0, n_blocks * block_rows - R), (0, 0)))
-    tags = jnp.where(sched.tags == SENTINEL, 0, sched.tags)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n_windows, max_warps),
+        grid=(n_windows, dplan.max_warps),
         in_specs=[
-            pl.BlockSpec((1, window), lambda w, t, tags: (w, 0)),
-            pl.BlockSpec((1, window), lambda w, t, tags: (w, 0)),
+            _meta_block_spec(window, dplan.packed),
             pl.BlockSpec((block_rows, D), lambda w, t, tags: (tags[w, t], 0)),
         ],
         out_specs=pl.BlockSpec((window, D), lambda w, t, tags: (w, 0)),
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, block_rows=block_rows, window=window),
+        functools.partial(
+            _kernel, block_rows=block_rows, window=window, packed=dplan.packed
+        ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_windows * window, D), table.dtype),
         interpret=interpret,
-    )(tags, sched.elem_warp, sched.elem_offset, table_p)
-    return out[:n]
+    )(dplan.tags, dplan.elem_meta, table_p)
+    return out[:n_out]

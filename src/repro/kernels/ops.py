@@ -40,12 +40,15 @@ def _interpret_default() -> bool:
 
 def coalesced_gather(
     table: jnp.ndarray,
-    indices: jnp.ndarray,
+    indices: jnp.ndarray | None = None,
     *,
     window: int = 256,
     block_rows: int = 8,
     max_warps: int | None = None,
     schedule=None,
+    plan=None,
+    packed: bool | str | None = None,
+    n_out: int | None = None,
     backend: str = "pallas",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -58,6 +61,9 @@ def coalesced_gather(
         block_rows=block_rows,
         max_warps=max_warps,
         schedule=schedule,
+        plan=plan,
+        packed=packed,
+        n_out=n_out,
         interpret=resolve_interpret(interpret),
     )
 

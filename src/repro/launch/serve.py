@@ -5,6 +5,14 @@ batched SpMV serving mode built on the plan-once engine.
 batched generation loop on CPU; on TPU the same path serves the full config
 on the production mesh.
 
+`python -m repro.launch.serve --arch <id> --reduced --paged --decode-steps N`
+serves end-to-end paged decode instead: per-layer paged KV caches
+(models.paged_kv) whose page gathers resolve through the shared
+`core.gather_engine` plan cache, with per-layer gather plan reports,
+tokens/s, a paged-vs-dense parity gate, and a zero-steady-state-plan-builds
+assertion (the static page table keeps every decode step on one cached
+engine).
+
 `python -m repro.launch.serve --spmv banded --batch 64 --requests 8` stands up
 an `SpMVEngine` for one matrix and serves batches of right-hand sides through
 the cached coalescer plan (`matmat`), reporting steady-state throughput — the
@@ -60,6 +68,137 @@ def generate(model, params, prompt, *, max_new_tokens: int, rt: Runtime,
                 jnp.int32
             )
     return jnp.concatenate(outs, axis=1)
+
+
+def serve_paged(args) -> None:
+    """End-to-end paged decode: per-layer paged KV caches, a prefill +
+    `append_token`/`paged_attention` decode loop, per-layer gather plan
+    reports from the shared `GatherEngine`, tokens/s, and a paged-vs-dense
+    parity gate (the paged path must reproduce `_sdpa` over the same K/V).
+
+    The static allocator keeps every layer's page table constant across
+    decode steps, so all steady-state gathers resolve through ONE cached
+    engine — the loop asserts zero schedule builds after the first step."""
+    from repro.core.engine import schedule_cache_stats
+    from repro.core.gather_engine import gather_engine_cache_stats
+    from repro.models.layers import _sdpa
+    from repro.models.paged_kv import (
+        alloc_paged, append_token, kv_plan_report, paged_attention,
+    )
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    B, L = args.batch, cfg.n_layers
+    n_kv, hd, H = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
+    block, steps = args.page_block, args.decode_steps
+    max_len = args.prompt_len + steps
+    max_pages = -(-max_len // block)
+    # serve's --backend names the SpMV backends; the gather engine calls the
+    # pure-jnp data path "coalesced" and accepts "reference" as its alias.
+    backend = args.backend
+    print(
+        f"paged-serve: {args.arch} ({'reduced' if args.reduced else 'full'}) "
+        f"layers={L} batch={B} n_kv={n_kv} head_dim={hd} heads={H} "
+        f"page_block={block} prompt={args.prompt_len} decode={steps} "
+        f"backend={backend}"
+    )
+
+    # One paged cache per layer (pool sized exactly for the batch), plus a
+    # dense mirror of everything appended — the parity reference.
+    caches = [
+        alloc_paged(
+            n_pages=B * max_pages, block=block, n_kv=n_kv, hd=hd,
+            batch=B, max_len=max_len, dtype=jnp.float32,
+        )
+        for _ in range(L)
+    ]
+    dense_k = np.zeros((L, B, max_len, n_kv, hd), np.float32)
+    dense_v = np.zeros((L, B, max_len, n_kv, hd), np.float32)
+    rng = np.random.default_rng(args.seed)
+
+    def append_all(pos: int) -> None:
+        """One token's K/V per layer into both the paged and dense caches."""
+        for li in range(L):
+            k = rng.standard_normal((B, n_kv, hd)).astype(np.float32)
+            v = rng.standard_normal((B, n_kv, hd)).astype(np.float32)
+            dense_k[li, :, pos] = k
+            dense_v[li, :, pos] = v
+            caches[li] = append_token(
+                caches[li], jnp.asarray(k), jnp.asarray(v)
+            )
+
+    # --- prefill: stage the prompt into every layer's cache
+    t0 = time.time()
+    for pos in range(args.prompt_len):
+        append_all(pos)
+    prefill_s = time.time() - t0
+
+    # --- decode loop: append one token then attend over the paged cache,
+    # checking every layer against dense SDPA on the mirrored K/V
+    max_err = 0.0
+    builds_after_first = None
+    t0 = time.time()
+    for step in range(steps):
+        pos = args.prompt_len + step
+        append_all(pos)
+        cur = pos + 1
+        mask = jnp.ones((B, 1, 1, cur), bool)
+        for li in range(L):
+            q = jnp.asarray(
+                rng.standard_normal((B, 1, H, hd)).astype(np.float32)
+            )
+            out_p = paged_attention(
+                q, caches[li], n_heads=H, backend=backend
+            )
+            out_d = _sdpa(
+                q, jnp.asarray(dense_k[li, :, :cur]),
+                jnp.asarray(dense_v[li, :, :cur]), mask,
+            )
+            max_err = max(
+                max_err,
+                float(np.abs(np.asarray(out_p) - np.asarray(out_d)).max()),
+            )
+        if step == 0:
+            builds_after_first = schedule_cache_stats()["built"]
+    decode_s = time.time() - t0
+    builds_warm = schedule_cache_stats()["built"] - builds_after_first
+
+    # --- per-layer gather plan report (identical tables -> one shared plan)
+    for li in range(L):
+        rep = kv_plan_report(caches[li], backend=backend)
+        gp = rep["gather_perf"]
+        print(
+            f"  layer {li}: pages={rep['n_indices']} "
+            f"wide_accesses={rep['wide_accesses']} "
+            f"coalesce_rate={rep['coalesce_rate']:.2f} "
+            f"cached={rep['schedule_cached']} "
+            f"meta_bytes={rep['metadata']['meta_bytes']} "
+            f"model_speedup=x{gp['speedup']:.2f}"
+        )
+    toks = B * steps
+    print(
+        f"  prefill {args.prompt_len} tokens in {prefill_s:.3f}s; decoded "
+        f"{steps} steps x {B} requests in {decode_s:.3f}s "
+        f"({toks / max(decode_s, 1e-12):.1f} tok/s, {L} layers)"
+    )
+    stats = schedule_cache_stats()
+    eng_stats = gather_engine_cache_stats()
+    print(
+        f"  parity vs dense cache: max_abs_err={max_err:.2e} (tol=1e-5); "
+        f"plan builds: total={stats['built']}, steady-state={builds_warm}; "
+        f"engine cache: {eng_stats}"
+    )
+    if not (max_err <= 1e-5):
+        raise SystemExit(
+            f"paged-serve: paged attention diverged from the dense cache "
+            f"(max_abs_err={max_err:.3e} > 1e-5)"
+        )
+    if builds_warm != 0:
+        raise SystemExit(
+            f"paged-serve: plan-reuse violation — {builds_warm} schedule "
+            f"build(s) after the first decode step (expected 0)"
+        )
 
 
 _SPMV_MATRICES = {
@@ -355,6 +494,21 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument(
+        "--paged", action="store_true",
+        help="serve end-to-end paged decode for --arch: per-layer paged KV "
+        "caches (models.paged_kv) with the page gather resolved through the "
+        "shared GatherEngine, gated on paged-vs-dense parity and zero "
+        "steady-state plan builds",
+    )
+    ap.add_argument(
+        "--decode-steps", type=int, default=16,
+        help="decode steps for --paged (tokens generated per request)",
+    )
+    ap.add_argument(
+        "--page-block", type=int, default=4,
+        help="KV page size in tokens for --paged",
+    )
+    ap.add_argument(
         "--spmv", choices=sorted(_SPMV_MATRICES),
         help="serve batched SpMV for a synthetic matrix family instead of "
         "an LLM (routes through core.engine.SpMVEngine)",
@@ -430,6 +584,9 @@ def main() -> None:
         return
     if not args.arch:
         ap.error("--arch is required unless --spmv is given")
+    if args.paged:
+        serve_paged(args)
+        return
 
     cfg = get_arch(args.arch)
     if args.reduced:

@@ -7,26 +7,33 @@ block's hits together — which on TPU becomes: argsort assignments by expert,
 scatter tokens into a contiguous (E, C, D) buffer (one "wide access" per
 expert slab), run batched expert FFNs, and combine back in original order via
 the carried (warp, offset)=(expert, slot) metadata. Exactly the CSHR
-tag/hitmap/offsets flow, with experts as blocks (DESIGN.md §4).
+tag/hitmap/offsets flow, with experts as blocks.
+
+`dispatch_report` runs the same expert-assignment stream through the shared
+gather planner (`core.gather_engine`), so per-layer coalesce and
+capacity-drop stats come from the exact machinery the SpMV/paged-KV paths
+are gated on.
 
 Under EP, experts (and the (E, C, D) buffer) shard over the 'model' axis while
 tokens shard over 'data'; XLA inserts the all-to-alls at the resharding point.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as _P
+
+from repro.core.gather_engine import get_gather_engine
 
 from .layers import _dense_init, ffn_apply, init_ffn
+
 
 def _constrain(x, spec):
     """with_sharding_constraint that degrades to a no-op outside a mesh
     context (single-device tests / examples)."""
-    import jax
-    from jax.sharding import PartitionSpec as _P
-
     try:
         return jax.lax.with_sharding_constraint(x, _P(*spec))
     except (RuntimeError, ValueError):
@@ -172,3 +179,52 @@ def moe_apply(
     frac_probs = probs.mean(0)
     aux = E * jnp.sum(frac_tokens * frac_probs)
     return y.reshape(B, S, D), aux
+
+
+def dispatch_report(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D) — concrete activations
+    *,
+    moe,
+    capacity_factor: float = 1.25,
+    window: int = 256,
+    backend: str = "coalesced",
+) -> Dict[str, object]:
+    """Per-layer dispatch diagnostics: the token->expert assignment stream
+    (the same ``idx.reshape(-1)`` `_build_buf` sorts) run through the shared
+    gather planner, plus the capacity-drop accounting `moe_apply` applies.
+
+    Routing math is identical to `moe_apply`'s front half, so the reported
+    stream is exactly what dispatch executes. Needs concrete inputs (it
+    plans host-side); call it outside jit."""
+    B, S, D = x.shape
+    E, k = moe.n_experts, moe.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = (xf @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, k)
+
+    flat_e = np.asarray(idx, dtype=np.int32).reshape(-1)  # (T*k,)
+    C = max(1, int(capacity_factor * T * k / E))
+    counts = np.bincount(flat_e, minlength=E)
+    dropped = int(np.maximum(counts - C, 0).sum())
+
+    eng = get_gather_engine(
+        (E, int(moe.d_expert)), flat_e,
+        window=window, block_rows=1, backend=backend,
+    )
+    return {
+        "n_tokens": T,
+        "top_k": k,
+        "n_experts": E,
+        "capacity": C,
+        "capacity_factor": float(capacity_factor),
+        "assignments": int(flat_e.size),
+        "tokens_per_expert": counts.tolist(),
+        "dropped": dropped,
+        "drop_fraction": dropped / float(flat_e.size),
+        "max_load": int(counts.max()),
+        "load_imbalance": float(counts.max() / max(counts.mean(), 1e-9)),
+        "gather": eng.plan_report(),
+    }

@@ -7,18 +7,25 @@ indirect access. We coalesce the per-request page reads with the same
 schedule machinery (core.coalescer) — shared-prefix requests hit the same
 pages (CSHR hits = prefix cache reuse, for free).
 
+Gathers resolve through `core.gather_engine.get_gather_engine`, keyed on the
+page-table digest: the static allocator keeps the table constant across
+`append_token`, so every decode step after the first hits the cached engine —
+zero schedule builds in steady state (`benchmarks/run.py --decode` gates it).
+
 This is the serving-layer counterpart of the embedding/MoE integration; the
 dense per-layer cache in transformer.py stays the default (XLA-friendlier),
-and paged mode is exercised by tests + examples/serve_paged.py.
+and paged mode is served end-to-end by `launch/serve.py --paged` (see also
+examples/serve_decode.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.gather_engine import GatherEngine, get_gather_engine
 from repro.core.indirect_stream import coalesced_gather
 
 
@@ -47,11 +54,16 @@ def alloc_paged(
     max_len: int, dtype=jnp.bfloat16,
 ) -> PagedKV:
     max_pages = -(-max_len // block)
+    if batch * max_pages > n_pages:
+        raise ValueError(
+            f"page pool too small: batch={batch} x max_pages={max_pages} "
+            f"(max_len={max_len}, block={block}) needs "
+            f"{batch * max_pages} pages, pool has {n_pages}"
+        )
     # simple static allocator: request b owns pages [b*max_pages, ...)
     table = (
         jnp.arange(batch)[:, None] * max_pages + jnp.arange(max_pages)[None, :]
     ).astype(jnp.int32)
-    assert batch * max_pages <= n_pages, "page pool too small"
     return PagedKV(
         k_pages=jnp.zeros((n_pages, block, n_kv, hd), dtype),
         v_pages=jnp.zeros((n_pages, block, n_kv, hd), dtype),
@@ -74,6 +86,25 @@ def append_token(cache: PagedKV, k: jnp.ndarray, v: jnp.ndarray) -> PagedKV:
     )
 
 
+def _kv_engine(
+    cache: PagedKV, *, window: int = 256, backend: str = "coalesced"
+) -> GatherEngine:
+    """The page-gather engine for this cache, keyed on the page-table digest.
+
+    The static allocator keeps the table constant across `append_token`, so
+    steady-state decode hits the same engine (same schedule object, warm jit)
+    every step. k and v pages share the geometry, hence one engine serves
+    both gathers."""
+    n_pages, block, n_kv, hd = cache.k_pages.shape
+    return get_gather_engine(
+        (n_pages, block * n_kv * hd),
+        cache.page_table.reshape(-1),
+        window=window,
+        block_rows=1,
+        backend=backend,
+    )
+
+
 def gather_kv(
     cache: PagedKV, *, window: int = 256, backend: str = "coalesced"
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -81,17 +112,42 @@ def gather_kv(
 
     The index stream is the flattened page table; block_rows=1 over the page
     axis because a PAGE IS the wide block (block coalescing dedups repeated
-    pages across requests — shared prefixes fetch once)."""
+    pages across requests — shared prefixes fetch once). A concrete page
+    table resolves through the cached `GatherEngine`; a traced one (paged
+    decode inside a jit) falls back to the in-trace path."""
     n_pages, block, n_kv, hd = cache.k_pages.shape
     B, max_pages = cache.page_table.shape
-    flat = cache.page_table.reshape(-1)
     kf = cache.k_pages.reshape(n_pages, block * n_kv * hd)
     vf = cache.v_pages.reshape(n_pages, block * n_kv * hd)
-    gk = coalesced_gather(kf, flat, window=window, block_rows=1, backend=backend)
-    gv = coalesced_gather(vf, flat, window=window, block_rows=1, backend=backend)
+    if isinstance(cache.page_table, jax.core.Tracer):
+        flat = cache.page_table.reshape(-1)
+        gk = coalesced_gather(
+            kf, flat, window=window, block_rows=1, backend=backend
+        )
+        gv = coalesced_gather(
+            vf, flat, window=window, block_rows=1, backend=backend
+        )
+    else:
+        eng = _kv_engine(cache, window=window, backend=backend)
+        gk = eng.gather(kf)
+        gv = eng.gather(vf)
     k = gk.reshape(B, max_pages * block, n_kv, hd)
     v = gv.reshape(B, max_pages * block, n_kv, hd)
     return k, v
+
+
+def kv_plan_report(
+    cache: PagedKV, *, window: int = 256, backend: str = "coalesced"
+) -> Dict[str, object]:
+    """The page-gather plan, inspectable (`GatherEngine.plan_report`):
+    coalesce stats (shared-prefix dedup shows up as wide_accesses <
+    B * max_pages), metadata traffic, and the `gather_perf` model term. The
+    modeled row width is one full KV page."""
+    n_pages, block, n_kv, hd = cache.k_pages.shape
+    eng = _kv_engine(cache, window=window, backend=backend)
+    return eng.plan_report(
+        row_bytes=block * n_kv * hd * cache.k_pages.dtype.itemsize
+    )
 
 
 def paged_attention(

@@ -14,9 +14,11 @@ def _fresh_plan_caches():
     before every test, counter assertions ("plan built exactly once") depend
     on test order and cross-test cache pollution can mask regressions."""
     from repro.core.engine import clear_engine_cache, clear_schedule_cache
+    from repro.core.gather_engine import clear_gather_engine_cache
     from repro.core.tune import clear_tune_cache
 
     clear_engine_cache()
     clear_schedule_cache()
+    clear_gather_engine_cache()
     clear_tune_cache()
     yield

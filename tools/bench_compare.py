@@ -1,9 +1,9 @@
 """Bench-regression gate: diff fresh BENCH_*.json against committed baselines.
 
-CI's bench jobs (`benchmarks-smoke`, `matmat-smoke`, `solve-smoke`) run
-`python -m benchmarks.run --smoke|--matmat|--solve`, which writes
-BENCH_smoke.json / BENCH_matmat.json / BENCH_solve.json into the working
-directory. This script compares the higher-is-better metrics in those files
+CI's bench jobs (`benchmarks-smoke`, `matmat-smoke`, `solve-smoke`,
+`decode-smoke`) run `python -m benchmarks.run --smoke|--matmat|--solve|
+--decode`, which writes BENCH_smoke.json / BENCH_matmat.json /
+BENCH_solve.json / BENCH_decode.json into the working directory. This script compares the higher-is-better metrics in those files
 against the baselines committed under ``benchmarks/baselines/`` and exits
 nonzero when any metric drops more than its tolerance — the perf trajectory
 becomes a merge gate instead of an artifact someone has to remember to read.
@@ -39,6 +39,7 @@ BENCH_FILES = {
     "smoke": "BENCH_smoke.json",
     "matmat": "BENCH_matmat.json",
     "solve": "BENCH_solve.json",
+    "decode": "BENCH_decode.json",
 }
 MODEL_TOL = 0.10
 MEASURED_TOL = 0.50
@@ -105,6 +106,26 @@ def extract_metrics(kind: str, payload: dict) -> List[Tuple[str, float, str]]:
                     f"solve/{solver}/{name}/iters_per_s",
                     float(row["iters_per_s"]), "measured",
                 ))
+    elif kind == "decode":
+        decode = payload.get("decode") or {}
+        sp = decode.get("shared_prefix") or {}
+        # plan-structural metrics are deterministic functions of the stream
+        for key in ("dedup_ratio", "model_speedup_shared"):
+            if key in sp:
+                metrics.append((
+                    f"decode/shared_prefix/{key}", float(sp[key]), "model"
+                ))
+        plan = decode.get("plan") or {}
+        if "coalesce_rate" in plan:
+            metrics.append((
+                "decode/plan/coalesce_rate",
+                float(plan["coalesce_rate"]), "model",
+            ))
+        if "tokens_per_s" in decode:
+            metrics.append((
+                "decode/tokens_per_s", float(decode["tokens_per_s"]),
+                "measured",
+            ))
     else:
         raise ValueError(f"unknown bench kind {kind!r}")
     return metrics
