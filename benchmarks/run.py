@@ -36,6 +36,18 @@ MATMAT_JITTER_TOL = 1.10
 # a conservative structural floor — it holds for any schedule whose tag
 # bytes stay under half its element bytes.
 PACKED_TRAFFIC_FLOOR = 1.5
+# Cost-partitioned matmat must not run slower than the even split. Shard
+# loops on a shared CPU host are noisier than the single-kernel timings
+# above (the strict gate is the model-imbalance one), hence the wider
+# margin.
+PARTITION_JITTER_TOL = 1.25
+# bf16 values halve the value stream but metadata and wide fetches ship at
+# full width either way, so the off-chip reduction is well under 2x; any
+# plan whose value bytes dominate clears 1.05 easily.
+VALUE_TRAFFIC_FLOOR = 1.05
+# Relative error budget for bf16-stored values (matches tests/test_bf16.py:
+# bf16 keeps 8 mantissa bits; products accumulate in f32).
+BF16_REL_TOL = 6e-3
 
 
 def _kernel_microbench() -> None:
@@ -258,6 +270,158 @@ def _sharded_smoke() -> dict:
         "n_shards": sharded.n_shards,
         "max_abs_err": err,
     }
+
+
+def _partition_smoke() -> dict:
+    """Cost-balanced sharding rows on a genuinely skewed matrix.
+
+    ``powerlaw(skew=3.0)`` clusters hub rows (crawl-ordered), so an even
+    slice split leaves one straggler shard holding most of the padded nnz.
+    Every strategy must stay bit-identical to the single-device engine
+    (per-shard width padding reduces through the invariant tree), and the
+    cost partition must beat the even split on the straggler-aware perf
+    model's imbalance metric while serving matmats at least as fast."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.dist import ShardedSpMVEngine
+    from repro.core.engine import SpMVEngine
+    from repro.core.formats import csr_to_sell
+    from repro.core.matrices import powerlaw
+    from .common import emit, timed
+
+    n_shards, skew, k = 4, 3.0, 8
+    csr = powerlaw(2048, 6, skew=skew)(np.random.default_rng(0))
+    sell = csr_to_sell(csr)
+    X = jnp.asarray(
+        np.random.default_rng(1).standard_normal((sell.n_cols, k))
+        .astype(np.float32)
+    )
+    single = SpMVEngine(sell, backend="reference")
+    Y0 = np.asarray(single.matmat(X))
+    _, us_single = timed(lambda: single.matmat(X).block_until_ready())
+    emit(
+        "sharded/partition/single_device", us_single,
+        f"n={sell.n_rows};k={k};skew={skew}",
+    )
+    out: dict = {
+        "n_shards": n_shards, "skew": skew,
+        "single_us": us_single, "strategies": {},
+    }
+    for strat in ("even", "nnz", "cost", "cost2d"):
+        eng = ShardedSpMVEngine(
+            sell, backend="reference", partition=strat, n_shards=n_shards
+        )
+        err = float(np.abs(np.asarray(eng.matmat(X)) - Y0).max())
+        rep = eng.plan_report()
+        part = rep["partition"]
+        nnz_padded = sum(s["nnz_padded"] for s in rep["shards"])
+        _, us = timed(lambda: jax.block_until_ready(eng.matmat(X)))
+        emit(
+            f"sharded/partition/{strat}", us,
+            f"n={sell.n_rows};k={k};shards={eng.n_shards};"
+            f"imbalance={part['imbalance']['ratio']:.4f};"
+            f"nnz_padded={nnz_padded};max_abs_err={err:.2e}",
+        )
+        out["strategies"][strat] = {
+            "imbalance": round(part["imbalance"]["ratio"], 5),
+            "max_shard_cycles": part["imbalance"]["max_shard_cycles"],
+            "mean_shard_cycles": part["imbalance"]["mean_shard_cycles"],
+            "nnz_padded": nnz_padded,
+            "max_abs_err": err,
+            "us": us,
+        }
+    return out
+
+
+def _partition_gate(part: dict) -> dict:
+    """Partition failures, empty when clean: every strategy's sharded
+    result must be bit-identical to the single-device engine, and on the
+    skewed smoke matrix the cost partition must yield strictly lower
+    model-cycle imbalance than the even split without serving slower.
+    (NaN comparisons are written to fail, as in the other gates.)"""
+    bad = {}
+    strategies = part["strategies"]
+    for name, row in strategies.items():
+        if not (row["max_abs_err"] == 0.0):
+            bad[f"partition-{name}-parity"] = row["max_abs_err"]
+    even, cost = strategies["even"], strategies["cost"]
+    if not (cost["imbalance"] < even["imbalance"]):
+        bad["partition-cost-vs-even-imbalance"] = (
+            cost["imbalance"], even["imbalance"]
+        )
+    if not (cost["us"] <= even["us"] * PARTITION_JITTER_TOL):
+        bad["partition-cost-vs-even-throughput"] = (cost["us"], even["us"])
+    return bad
+
+
+def _value_dtype_smoke() -> dict:
+    """bf16 SELL-value rows: the perf model must credit the halved value
+    stream, and the reference engine's bf16 results must track the native
+    ones within the bf16 mantissa budget (products accumulate in f32)."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import SpMVEngine
+    from repro.core.formats import csr_to_sell
+    from repro.core.matrices import banded, powerlaw
+    from .common import emit
+
+    smoke = (
+        ("banded-512", banded(512, 16, 0.7)),
+        ("powerlaw-512", powerlaw(512, 8)),
+    )
+    out: dict = {}
+    for name, gen in smoke:
+        csr = gen(np.random.default_rng(0))
+        sell = csr_to_sell(csr)
+        X = jnp.asarray(
+            np.random.default_rng(1).standard_normal((sell.n_cols, 8))
+            .astype(np.float32)
+        )
+        native = SpMVEngine(sell, backend="reference")
+        narrow = SpMVEngine(sell, backend="reference", value_dtype="bf16")
+        vals = narrow.plan_report()["values"]
+        ref = np.asarray(native.matmat(X))
+        err = float(np.abs(np.asarray(narrow.matmat(X)) - ref).max())
+        rel_err = err / max(float(np.abs(ref).max()), 1e-30)
+        emit(
+            f"values/bf16/{name}", 0.0,
+            f"n={sell.n_rows};"
+            f"value_bytes={vals['value_bytes_per_element']};"
+            f"traffic_reduction={vals['traffic_reduction']:.3f};"
+            f"rel_err={rel_err:.2e}",
+        )
+        out[name] = {
+            "value_dtype": vals["value_dtype"],
+            "value_bytes_per_element": vals["value_bytes_per_element"],
+            "traffic_reduction": round(vals["traffic_reduction"], 4),
+            "traffic_ratio": round(vals["traffic_ratio"], 5),
+            "traffic_ratio_native": round(vals["traffic_ratio_native"], 5),
+            "rel_err": rel_err,
+        }
+    return out
+
+
+def _value_dtype_gate(values: dict) -> dict:
+    """bf16 value failures, empty when clean: values must actually ship 2
+    bytes, the modeled off-chip reduction must clear the structural floor
+    and order correctly against native, and the numerics must stay within
+    the bf16 budget. (NaN comparisons are written to fail.)"""
+    bad = {}
+    for name, row in values.items():
+        if row["value_bytes_per_element"] != 2:
+            bad[f"values-{name}-bytes-per-elem"] = \
+                row["value_bytes_per_element"]
+        if not (row["traffic_reduction"] >= VALUE_TRAFFIC_FLOOR):
+            bad[f"values-{name}-traffic-reduction"] = \
+                row["traffic_reduction"]
+        if not (row["traffic_ratio"] <= row["traffic_ratio_native"]):
+            bad[f"values-{name}-traffic-ratio"] = (
+                row["traffic_ratio"], row["traffic_ratio_native"]
+            )
+        if not (row["rel_err"] <= BF16_REL_TOL):
+            bad[f"values-{name}-rel-err"] = row["rel_err"]
+    return bad
 
 
 def _streaming_smoke() -> dict:
@@ -993,6 +1157,8 @@ def main() -> None:
         parity: dict = {}
         sharded = None
         packed_plans = None
+        partition = None
+        value_dtypes = None
         if args.smoke:
             fig5_spmv.run()
             engine_cache.run()
@@ -1000,6 +1166,8 @@ def main() -> None:
             parity = _backend_parity_check()
             packed_plans = _packed_plan_smoke()
             sharded = _sharded_smoke()
+            partition = _partition_smoke()
+            value_dtypes = _value_dtype_smoke()
         stream = _streaming_smoke() if args.stream else None
         matmat = _matmat_smoke() if args.matmat else None
         solve = _solve_smoke() if args.solve else None
@@ -1017,6 +1185,8 @@ def main() -> None:
                 "backend_parity": parity,
                 "packed_plans": packed_plans,
                 "sharded": sharded,
+                "sharded_partition": partition,
+                "value_dtypes": value_dtypes,
                 # The caches this pass observed: regressions in plan reuse
                 # (built creeping above the matrix count, disk_rejects,
                 # engine-cache misses on repeat lookups) show up in the perf
@@ -1034,6 +1204,8 @@ def main() -> None:
             if not (sharded["max_abs_err"] <= PARITY_TOL):
                 bad["sharded-vs-single-device"] = sharded["max_abs_err"]
             bad.update(_packed_gate(packed_plans))
+            bad.update(_partition_gate(partition))
+            bad.update(_value_dtype_gate(value_dtypes))
         if stream is not None:
             stream_payload = {
                 "scale": os.environ.get("BENCH_SCALE", "ci"),

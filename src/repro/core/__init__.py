@@ -34,7 +34,18 @@ from .engine import (  # noqa: F401
 )
 from .dist import (  # noqa: F401
     ShardedSpMVEngine,
+    device_str,
     row_shard_sells,
+)
+from .partition import (  # noqa: F401
+    PARTITION_STRATEGIES,
+    balanced_bounds,
+    even_bounds,
+    resolve_partition,
+    shard_bounds,
+    shard_costs_for_bounds,
+    slice_costs,
+    slice_nnz,
 )
 from .runtime import (  # noqa: F401
     Executor,
@@ -68,6 +79,7 @@ from .perfmodel import (  # noqa: F401
     indirect_stream_perf,
     matmat_spmv_perf,
     plan_matmat_cycles,
+    sharded_spmv_perf,
     spmv_perf,
     streaming_spmv_perf,
 )

@@ -9,11 +9,18 @@ al., 2022) earns its HBM bandwidth by striping sparse rows across channels.
 `ShardedSpMVEngine` maps that decomposition onto a `jax.sharding` mesh:
 
   * **Row shards over the ``data`` axis.** The SELL matrix is partitioned by
-    row-slices into contiguous shards (balanced by slice count; shard counts
-    that don't divide `n_slices` are fine). Every shard keeps the *global*
-    padded width, so each shard's per-row reduction is shape-identical to the
-    single-device engine's — the decomposition is numerically invisible
-    (bit-identical on the reference backend, pinned by tests).
+    row-slices into contiguous shards. *Where* the boundaries fall is the
+    ``partition`` strategy (`core.partition`): ``"even"`` splits by slice
+    count (the legacy rule), ``"nnz"`` balances padded nonzeros, ``"cost"``
+    (the ``"auto"`` default) balances a per-slice perfmodel cycle estimate
+    — padded nnz + metadata bytes + estimated wide accesses — and
+    ``"cost2d"`` refines that over a SparseP-style row x column-segment
+    grid for extreme skew. Every shard pads to its *own* max slice width
+    (not the global W), collapsing padded nnz on skewed shards; the
+    reference executor's width reduction is a padding-invariant
+    power-of-two tree (`engine._width_tree_sum`), so the decomposition
+    stays numerically invisible (bit-identical on the reference backend for
+    every strategy, pinned by tests).
   * **One plan per shard.** Each shard is a real `SELLMatrix` owned by a real
     `SpMVEngine`: its own padded plan, its own content-addressed
     `BlockSchedule` (the shard's index stream has its own digest), its own
@@ -52,11 +59,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .coalescer import coalesce_stats
+from .coalescer import META_BYTES_PACKED, META_BYTES_UNPACKED, \
+    coalesce_stats, schedule_meta_bytes
 from .engine import DEFAULT_BUFFER_DEPTH, DEFAULT_COLS_PER_CHUNK, \
-    DEFAULT_K_TILE, get_engine, resolve_backend
+    DEFAULT_K_TILE, DEFAULT_WINDOW, get_engine, resolve_backend, \
+    resolve_packed
 from .formats import CSRMatrix, SELLMatrix
-from .perfmodel import matmat_spmv_perf, streaming_spmv_perf
+from .partition import resolve_partition, shard_bounds
+from .perfmodel import matmat_spmv_perf, sharded_spmv_perf, \
+    streaming_spmv_perf
 from .runtime import column_groups, data_model_grid, device_put_rhs, \
     normalize_to_sell, proper_slice
 
@@ -69,37 +80,67 @@ def _default_mesh() -> jax.sharding.Mesh:
     return auto_spmv_mesh()
 
 
+def device_str(dev: jax.Device) -> str:
+    """Stable, JSON-serializable device name (``"cpu:0"``) — platform plus
+    id. Raw `jax.Device` objects don't JSON-serialize, so `placement()`
+    carries this alongside them for bench payloads and serving loops."""
+    return f"{dev.platform}:{int(dev.id)}"
+
+
 def row_shard_sells(
-    sell: SELLMatrix, n_shards: int
+    sell: SELLMatrix,
+    n_shards: int,
+    *,
+    partition: str = "even",
+    window: Optional[int] = None,
+    block_rows: int = 8,
+    bounds: Optional[np.ndarray] = None,
 ) -> List[Tuple[SELLMatrix, int, int]]:
     """Partition a SELL matrix into `n_shards` contiguous row-slice shards.
 
     Returns ``[(shard_sell, row_lo, row_hi), ...]`` with ``row_lo/row_hi``
-    the half-open global row range the shard owns. Slices are split balanced
-    (`np.array_split` semantics — uneven counts allowed) and every shard is
-    padded to the *global* maximum slice width, so per-row reductions keep
-    the exact shape (and therefore bit pattern) of the unsharded engine.
+    the half-open global row range the shard owns. Boundaries come from the
+    ``partition`` strategy (`core.partition.shard_bounds`; default
+    ``"even"`` keeps the legacy slice-count split) or from an explicit
+    ``bounds`` array (slice indices, ``n_shards + 1`` entries). Each shard
+    pads to its *own* maximum slice width — padded nnz on narrow shards
+    collapses instead of inheriting the global straggler width — and the
+    reference executor's padding-invariant width reduction keeps per-row
+    results bit-identical to the unsharded engine anyway.
     """
     from .spmv import _sell_padded  # local: spmv imports engine which is a sib
 
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     n_shards = min(n_shards, sell.n_slices) or 1
-    ci, va, W = _sell_padded(sell)  # (n_slices, W, H)
+    if bounds is None:
+        bounds, _ = shard_bounds(
+            sell, n_shards, partition=partition,
+            window=DEFAULT_WINDOW if window is None else int(window),
+            block_rows=block_rows,
+        )
+    bounds = np.asarray(bounds, dtype=np.int64)
+    n_shards = bounds.size - 1
+    ci, va, _ = _sell_padded(sell)  # (n_slices, W, H)
     H = sell.slice_height
-    bounds = np.linspace(0, sell.n_slices, n_shards + 1).astype(int)
+    widths = np.asarray(sell.slice_widths, dtype=np.int64)
     shards: List[Tuple[SELLMatrix, int, int]] = []
     for k in range(n_shards):
         s0, s1 = int(bounds[k]), int(bounds[k + 1])
         nsl = s1 - s0
+        # A shard of empty slices keeps one zero column (colidx 0 / value 0)
+        # so its engine still has a well-formed stream to plan against —
+        # unless the whole matrix is width-0, which stays width-0.
+        Ws = int(widths[s0:s1].max(initial=0))
+        Ws = min(max(Ws, 1), ci.shape[1]) if ci.shape[1] else 0
         shard = SELLMatrix(
             n_rows=min(sell.n_rows, s1 * H) - s0 * H,
             n_cols=sell.n_cols,
             slice_height=H,
-            slice_ptrs=np.arange(nsl + 1, dtype=np.int64) * (W * H),
-            slice_widths=np.full(nsl, W, dtype=np.int32),
-            colidx=np.ascontiguousarray(ci[s0:s1].reshape(-1)),
-            values=np.ascontiguousarray(va[s0:s1].reshape(-1)),
+            slice_ptrs=np.arange(nsl + 1, dtype=np.int64) * (Ws * H),
+            slice_widths=np.full(nsl, Ws, dtype=np.int32),
+            colidx=np.ascontiguousarray(ci[s0:s1, :Ws].reshape(-1)),
+            values=np.ascontiguousarray(va[s0:s1, :Ws].reshape(-1)),
         )
         shard.validate()
         shards.append((shard, s0 * H, min(sell.n_rows, s1 * H)))
@@ -139,9 +180,14 @@ class ShardedSpMVEngine:
     ``n_shards`` defaults to the ``data`` axis size; larger values
     round-robin shards over the mesh rows.
 
+    ``partition`` selects where the shard boundaries fall
+    (`core.partition`): ``"even"`` | ``"nnz"`` | ``"cost"`` | ``"cost2d"``,
+    default ``"auto"`` -> ``"cost"`` (balance the per-slice perfmodel cycle
+    estimate so no device straggles on skewed matrices).
+
     All plan parameters (``window``, ``block_rows``, ``backend``,
     ``cols_per_chunk``, ``k_tile``, ``matmat_mode``, ``packed``,
-    ``buffer_depth``, ``cache_dir``) are
+    ``buffer_depth``, ``value_dtype``, ``cache_dir``) are
     forwarded to every shard's `SpMVEngine`, so backends, window resolution,
     the fused multi-column matmat routing, the content-addressed schedule
     cache, and npz persistence all behave exactly as on the single-device
@@ -165,6 +211,8 @@ class ShardedSpMVEngine:
         matmat_mode: str = "auto",
         packed: Union[bool, str] = "auto",
         buffer_depth: int = DEFAULT_BUFFER_DEPTH,
+        value_dtype: Optional[str] = None,
+        partition: str = "auto",
         cache_dir: Optional[str] = None,
     ):
         sell = normalize_to_sell(
@@ -183,7 +231,23 @@ class ShardedSpMVEngine:
         self.n_shards = (
             self.n_data if n_shards is None else int(n_shards)
         )
-        self._shards = row_shard_sells(sell, self.n_shards)
+        if self.n_shards < 1:
+            raise ValueError(
+                f"n_shards must be >= 1, got {self.n_shards}"
+            )
+        # Partition strategy (core.partition): "auto" resolves to the
+        # perfmodel cost balance; the boundary computation sees the same
+        # window/block_rows geometry the shard plans will use.
+        self.partition = partition
+        self.partition_resolved = resolve_partition(partition)
+        bounds, self._partition_info = shard_bounds(
+            sell,
+            min(self.n_shards, sell.n_slices) or 1,
+            partition=partition,
+            window=DEFAULT_WINDOW if window is None else int(window),
+            block_rows=self.block_rows,
+        )
+        self._shards = row_shard_sells(sell, self.n_shards, bounds=bounds)
         self.n_shards = len(self._shards)  # clamped to n_slices
         # Through the engine cache: two sharded engines over the same matrix
         # (or a sharded engine rebuilt per request) share shard engines —
@@ -199,6 +263,7 @@ class ShardedSpMVEngine:
                 matmat_mode=matmat_mode,
                 packed=packed,
                 buffer_depth=buffer_depth,
+                value_dtype=value_dtype,
                 cache_dir=cache_dir,
             )
             for shard, _, _ in self._shards
@@ -213,16 +278,27 @@ class ShardedSpMVEngine:
     def placement(self, k: int) -> List[Dict[str, object]]:
         """The (shard, column-group) -> device assignment `matmat(X)` with
         ``X.shape[1] == k`` will use. One entry per dispatched block; serving
-        loops use this for per-device accounting."""
+        loops use this for per-device accounting. ``device`` is the raw
+        `jax.Device`; ``device_str``/``device_id`` are its stable
+        JSON-serializable forms (bench payloads dump placement directly).
+        ``nnz_padded``/``width`` describe the shard's own padded footprint —
+        per-shard width padding means these differ across shards on skewed
+        matrices."""
         groups = column_groups(k, self.n_model)
         out: List[Dict[str, object]] = []
         for i, (lo, hi) in enumerate(self.row_ranges):
+            shard_sell = self._shards[i][0]
             for j, cols in enumerate(groups):
+                dev = self.devices[self._shard_device_row(i), j]
                 out.append({
                     "shard": i,
-                    "device": self.devices[self._shard_device_row(i), j],
+                    "device": dev,
+                    "device_str": device_str(dev),
+                    "device_id": int(dev.id),
                     "rows": (lo, hi),
                     "cols": (cols.start, cols.stop),
+                    "nnz_padded": int(shard_sell.nnz_padded),
+                    "width": int(np.max(shard_sell.slice_widths, initial=0)),
                 })
         return out
 
@@ -388,11 +464,18 @@ class ShardedSpMVEngine:
             total_wide += wide
             total_elems += int(shard_stream.size)
             lo, hi = self.row_ranges[i]
+            packed_eff = resolve_packed(eng.packed, sched)
             shard_reports.append({
                 "shard": i,
                 "rows": (lo, hi),
                 "n_slices": eng.sell.n_slices,
+                "nnz": int(np.count_nonzero(eng.sell.values)),
                 "nnz_padded": eng.sell.nnz_padded,
+                "width": int(np.max(eng.sell.slice_widths, initial=0)),
+                "meta_bytes": schedule_meta_bytes(sched, packed=packed_eff),
+                "meta_bytes_per_element": (
+                    META_BYTES_PACKED if packed_eff else META_BYTES_UNPACKED
+                ),
                 "window": eng.window,
                 "n_windows": sched.n_windows,
                 "max_warps": sched.max_warps,
@@ -400,6 +483,9 @@ class ShardedSpMVEngine:
                 "coalesce_rate": rate,
                 "schedule_cached": eng.plan_cached,
                 "device_row": self._shard_device_row(i),
+                "device_str": device_str(
+                    self.devices[self._shard_device_row(i), 0]
+                ),
             })
         streaming = None
         if stream is not None:
@@ -427,6 +513,22 @@ class ShardedSpMVEngine:
                     for system in ("pack0", "pack256")
                 },
             }
+        # Straggler-bound sharded prediction over the *actual* shard
+        # matrices (their own padded widths): max over per-shard cycles plus
+        # the x broadcast — and the imbalance metric the partitioner
+        # minimizes and the multi-device bench job gates.
+        sharded_perf = sharded_spmv_perf(
+            [s for s, _, _ in self._shards], "pack256"
+        )
+        partition_report = {
+            **self._partition_info,
+            "perf": dataclasses.asdict(sharded_perf),
+            "imbalance": {
+                "max_shard_cycles": sharded_perf.max_shard_cycles,
+                "mean_shard_cycles": sharded_perf.mean_shard_cycles,
+                "ratio": sharded_perf.imbalance,
+            },
+        }
         return {
             "n_rows": self.sell.n_rows,
             "n_cols": self.sell.n_cols,
@@ -442,6 +544,7 @@ class ShardedSpMVEngine:
                 float(total_elems) / float(total_wide * self.block_rows)
                 if total_wide else 0.0
             ),
+            "partition": partition_report,
             "shards": shard_reports,
             **({"streaming": streaming} if streaming is not None else {}),
             **({"matmat": matmat} if matmat is not None else {}),

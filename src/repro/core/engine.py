@@ -87,6 +87,77 @@ DEFAULT_K_TILE = 8
 DEFAULT_BUFFER_DEPTH = 2
 MATMAT_MODES = ("fused", "vmapped", "auto")
 PACKED_CHOICES = (True, False, "auto")
+# SELL value-storage dtypes. "native" (== None) streams values at the input
+# dtype; "bf16"/"f32" store the value stream narrower and accumulate at the
+# promoted dtype (kernels and the reference path both promote — the bf16
+# numerics gate lives in tests/test_bf16.py).
+VALUE_DTYPES = ("native", "bf16", "f32")
+
+
+def resolve_value_dtype(value_dtype: Optional[str]) -> Optional[str]:
+    """Normalize the value-storage knob: ``None``/"native" -> None (follow
+    the input dtype), otherwise one of `VALUE_DTYPES`."""
+    if value_dtype is None or value_dtype == "native":
+        return None
+    if value_dtype not in VALUE_DTYPES:
+        raise ValueError(
+            f"value_dtype must be one of {(None,) + VALUE_DTYPES}, got "
+            f"{value_dtype!r}"
+        )
+    return value_dtype
+
+
+def value_bytes_per_elem(
+    value_dtype: Optional[str], hw: "HWConfig" = DEFAULT_HW
+) -> float:
+    """Bytes per SELL value the plan actually streams — the perf model's
+    `value_bytes_per_elem` term (native keeps the model's `hw.elem_bytes`)."""
+    resolved = resolve_value_dtype(value_dtype)
+    if resolved is None:
+        return float(hw.elem_bytes)
+    return {"bf16": 2.0, "f32": 4.0}[resolved]
+
+
+def _runtime_one(x: jnp.ndarray) -> jnp.ndarray:
+    """An exact scalar 1.0 the compiler must treat as a runtime value:
+    ``sum(x[:1]) * 0 + 1`` cannot be constant-folded without fast-math
+    (``x[0]`` could be inf/nan), yet equals 1.0 bitwise for any finite
+    input. Feeding it to `_width_tree_sum` defeats FMA contraction there."""
+    s = jnp.sum(x.reshape(-1)[:1])
+    return s * s.dtype.type(0) + s.dtype.type(1)
+
+
+def _width_tree_sum(prod: jnp.ndarray, one: jnp.ndarray) -> jnp.ndarray:
+    """Reduce ``(n_slices, W, ...)`` over the width axis with a fixed
+    power-of-two halving tree. Unlike `jnp.sum` — whose reduction tree
+    depends on W, so ULP-level results change with padding — this reduction
+    is bitwise invariant to trailing zero columns: padding W up to a larger
+    power of two only inserts ``x + 0.0`` identity folds on top of the same
+    tree. That invariance is what lets `core.dist` pad each row shard to its
+    *own* max slice width (collapsing padded nnz on skewed matrices) while
+    staying bit-identical to the single-device engine.
+
+    ``one`` must be `_runtime_one(...)` of a kernel input. Multiplying the
+    product by it blocks the one rewrite XLA/LLVM would otherwise apply:
+    contracting the producing multiply into the first fold as an FMA, whose
+    extra-precision lanes vary with the padded width. After this multiply
+    the folds only ever see ``p * one`` operands, and the worst contraction
+    available is ``fma(p, 1.0, q)`` — which rounds bitwise identically to
+    the plain add — so every fold is exact at any width."""
+    if prod.shape[1] == 0:
+        return jnp.zeros(prod.shape[:1] + prod.shape[2:], prod.dtype)
+    prod = prod * one
+    p = 1
+    while p < prod.shape[1]:
+        p *= 2
+    if p != prod.shape[1]:
+        pad = [(0, 0)] * prod.ndim
+        pad[1] = (0, p - prod.shape[1])
+        prod = jnp.pad(prod, pad)
+    while prod.shape[1] > 1:
+        h = prod.shape[1] // 2
+        prod = prod[:, :h] + prod[:, h:]
+    return prod[:, 0]
 
 
 def resolve_packed(packed: Union[bool, str], schedule: BlockSchedule) -> bool:
@@ -515,6 +586,7 @@ class SpMVEngine:
         matmat_mode: str = "auto",
         packed: Union[bool, str] = "auto",
         buffer_depth: int = DEFAULT_BUFFER_DEPTH,
+        value_dtype: Optional[str] = None,
         plan_width_multiple: Optional[int] = None,
         cache_dir: Optional[str] = None,
     ):
@@ -524,6 +596,10 @@ class SpMVEngine:
         self.sell = sell
         self.backend = backend  # as requested ("auto" preserved for report)
         self.backend_resolved = resolve_backend(backend)
+        # "native"/None follows the input dtype; "bf16"/"f32" store the value
+        # stream narrower (accumulation promotes — both executors multiply
+        # into the RHS dtype). The tuner searches this via DEFAULT_SPACE.
+        self.value_dtype = resolve_value_dtype(value_dtype)
         self.cols_per_chunk = int(cols_per_chunk)
         if self.cols_per_chunk < 1:
             raise ValueError(f"cols_per_chunk must be >= 1, got {cols_per_chunk}")
@@ -669,6 +745,14 @@ class SpMVEngine:
             n_slices, H = sell.n_slices, sell.slice_height
             n_rows, n_out = sell.n_rows, stream.shape[0]
             _matmat_fused = None
+            _matmat_ref = None
+            # Narrow value storage: cast the hoisted value plan once per
+            # trace; the multiply promotes back to the RHS dtype (f32
+            # accumulation for bf16 values).
+            vdt = (
+                {"bf16": jnp.bfloat16, "f32": jnp.float32}[self.value_dtype]
+                if self.value_dtype is not None else None
+            )
 
             if self.backend_resolved == "pallas":
                 # Locals to the kernels package are lazy: core must stay
@@ -698,7 +782,7 @@ class SpMVEngine:
                 def _matvec(x: jnp.ndarray) -> jnp.ndarray:
                     y = sell_spmv_pallas(
                         None,
-                        jnp.asarray(va_plan, x.dtype),
+                        jnp.asarray(va_plan, vdt if vdt is not None else x.dtype),
                         x,
                         cols_per_chunk=cpc,
                         block_rows=block_rows,
@@ -713,7 +797,7 @@ class SpMVEngine:
                     def _matmat_fused(X: jnp.ndarray) -> jnp.ndarray:
                         Y = sell_spmm_pallas(
                             None,
-                            jnp.asarray(va_plan, X.dtype),
+                            jnp.asarray(va_plan, vdt if vdt is not None else X.dtype),
                             X,
                             cols_per_chunk=cpc,
                             block_rows=block_rows,
@@ -731,12 +815,38 @@ class SpMVEngine:
                         x[:, None], sched, n_out=n_out
                     )
                     g = gathered[:, 0].reshape(n_slices, W_plan, H)[:, :W]
-                    y = jnp.sum(jnp.asarray(va_plan[:, :W], x.dtype) * g, axis=1)
+                    va = jnp.asarray(
+                        va_plan[:, :W], vdt if vdt is not None else x.dtype
+                    )
+                    # Width reduction through the padding-invariant tree:
+                    # shards padded to their own (smaller) max width stay
+                    # bit-identical to the global-width single-device plan.
+                    y = _width_tree_sum(va * g, _runtime_one(x))
                     return y.reshape(-1)[:n_rows]
 
+                def _matmat_ref(X: jnp.ndarray) -> jnp.ndarray:
+                    # Direct 2-D variant of _matvec: same gather, same
+                    # product, same tree folds per column (the folds are
+                    # exact, so per-column bit-identity to matvec is
+                    # structural), with one shared gather pass per batch.
+                    k = X.shape[1]
+                    if k == 0:  # reshape(-1, 0) below can't infer a size
+                        return jnp.zeros((n_rows, 0), X.dtype)
+                    gathered = schedule_gather_reference(
+                        X, sched, n_out=n_out
+                    )
+                    g = gathered.reshape(n_slices, W_plan, H, k)[:, :W]
+                    va = jnp.asarray(
+                        va_plan[:, :W], vdt if vdt is not None else X.dtype
+                    )
+                    y = _width_tree_sum(va[..., None] * g, _runtime_one(X))
+                    return y.reshape(-1, k)[:n_rows]
+
             self._matvec = jax.jit(_matvec)
-            self._matmat_vmapped = jax.jit(
-                jax.vmap(_matvec, in_axes=1, out_axes=1)
+            self._matmat_vmapped = (
+                jax.jit(_matmat_ref) if _matmat_fused is None
+                and _matmat_ref is not None
+                else jax.jit(jax.vmap(_matvec, in_axes=1, out_axes=1))
             )
             self._matmat = (
                 jax.jit(_matmat_fused) if _matmat_fused is not None
@@ -929,6 +1039,25 @@ class SpMVEngine:
                 "traffic_ratio_unpacked":
                     perf_by_enc["unpacked"].traffic_ratio,
             }
+        # Value-storage report (both backends): the model-side traffic shift
+        # a narrower value stream buys, mirroring the metadata section. The
+        # numerics side is pinned separately (tests/test_bf16.py).
+        vbpe = value_bytes_per_elem(self.value_dtype, hw)
+        perf_native_v = spmv_perf(self.sell, "pack256", hw)
+        perf_active_v = (
+            spmv_perf(self.sell, "pack256", hw, value_bytes_per_elem=vbpe)
+            if self.value_dtype is not None else perf_native_v
+        )
+        report["values"] = {
+            "value_dtype": self.value_dtype or "native",
+            "value_bytes_per_element": vbpe,
+            "mem_util": perf_active_v.mem_utilization,
+            "traffic_ratio": perf_active_v.traffic_ratio,
+            "traffic_ratio_native": perf_native_v.traffic_ratio,
+            "traffic_reduction": (
+                perf_native_v.offchip_bytes / perf_active_v.offchip_bytes
+            ),
+        }
         if stream is not None:
             report["streaming"] = {
                 **{key: int(v) for key, v in stream.items()},
@@ -970,6 +1099,7 @@ def get_engine(
     matmat_mode: str = "auto",
     packed: Union[bool, str] = "auto",
     buffer_depth: int = DEFAULT_BUFFER_DEPTH,
+    value_dtype: Optional[str] = None,
     cache_dir: Optional[str] = None,
 ) -> SpMVEngine:
     """Engine cache: same matrix content + plan params -> same engine (and
@@ -1008,6 +1138,9 @@ def get_engine(
         ),
         block_rows,
         resolved,
+        # Value storage changes numerics on every backend, so it keys both
+        # ("native" and None share the engine — same resolution as __init__).
+        resolve_value_dtype(value_dtype),
         # k_tile only shapes the *fused* executable; a vmapped pallas engine
         # ignores it, so resolved-identical configurations share one engine
         # (the same rule that keeps cols_per_chunk out of reference keys).
@@ -1034,6 +1167,7 @@ def get_engine(
                 matmat_mode=matmat_mode,
                 packed=packed,
                 buffer_depth=buffer_depth,
+                value_dtype=value_dtype,
                 cache_dir=cache_dir,
             )
             _engine_cache.put(key, eng)

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -266,6 +266,7 @@ def spmv_perf(
     hw: HWConfig = DEFAULT_HW,
     *,
     meta_bytes_per_elem: float | None = None,
+    value_bytes_per_elem: float | None = None,
 ) -> SpMVResult:
     """Model one SpMV execution (tiled SELL per Sec. II-C).
 
@@ -278,8 +279,12 @@ def spmv_perf(
     (`coalescer.META_BYTES_PACKED`, one ``warp<<16|offset`` word), while the
     unpacked fallback ships 8 (`META_BYTES_UNPACKED`, two words) — so
     `traffic_ratio` and `mem_utilization` reflect the chosen encoding.
-    `ideal_bytes` always keeps the raw index width: the ideal traffic is a
-    property of the problem, not of the plan encoding.
+    ``value_bytes_per_elem`` is the analogous term for the SELL value
+    stream: a bf16 value store ships 2 bytes per nonzero instead of the
+    model's 8 (``hw.elem_bytes``), halving-and-halving-again the dominant
+    contiguous stream. `ideal_bytes` always keeps the raw index width and
+    the full value width: the ideal traffic is a property of the problem,
+    not of the plan encoding.
     """
     idx_stream = sell_index_stream(sell)
     nnz_p = sell.nnz_padded
@@ -289,11 +294,15 @@ def spmv_perf(
         else float(meta_bytes_per_elem)
     )
     meta_bytes = nnz_p * meta_bpe
+    value_bpe = (
+        float(hw.elem_bytes) if value_bytes_per_elem is None
+        else float(value_bytes_per_elem)
+    )
 
     # Contiguous streams (prefetcher, near-ideal efficiency): nonzeros, column
     # indices are the *index stream* (counted inside the adapter), slice ptrs,
     # result writeback.
-    nz_bytes = nnz_p * hw.elem_bytes
+    nz_bytes = nnz_p * value_bpe
     ptr_bytes = (sell.n_slices + 1) * hw.elem_bytes
     res_bytes = n_rows * hw.elem_bytes
     contiguous_bytes = nz_bytes + ptr_bytes + res_bytes
@@ -304,7 +313,7 @@ def spmv_perf(
 
     idx_bytes = nnz_p * hw.index_bytes
     ideal_bytes = (
-        nz_bytes + ptr_bytes + res_bytes + idx_bytes
+        nnz_p * hw.elem_bytes + ptr_bytes + res_bytes + idx_bytes
         + len(np.unique(idx_stream)) * hw.elem_bytes
     )
 
@@ -364,6 +373,74 @@ def spmv_perf(
         ideal_bytes=float(ideal_bytes),
         traffic_ratio=float(offchip / ideal_bytes),
         mem_utilization=float(util),
+    )
+
+
+@dataclasses.dataclass
+class ShardedSpMVResult:
+    """Straggler-bound prediction for one sharded SpMV dispatch: every
+    shard runs concurrently on its own memory system, so the matrix pass
+    costs the *slowest* shard, plus the x broadcast each device row pays
+    before its gathers can start."""
+
+    system: str
+    n_shards: int
+    shard_cycles: List[float]
+    max_shard_cycles: float
+    mean_shard_cycles: float
+    imbalance: float  # max_shard_cycles / mean_shard_cycles (>= 1.0)
+    broadcast_cycles: float
+    cycles: float  # max over shards + broadcast
+    runtime_ms: float
+
+
+def sharded_spmv_perf(
+    shards,
+    system: str,
+    hw: HWConfig = DEFAULT_HW,
+    *,
+    meta_bytes_per_elem: float | None = None,
+    value_bytes_per_elem: float | None = None,
+) -> ShardedSpMVResult:
+    """Model one sharded SpMV (`core.dist.ShardedSpMVEngine`) as the max
+    over per-shard `spmv_perf` cycle estimates plus the x-vector broadcast.
+
+    ``shards`` is a list of shard `SELLMatrix` objects (or ``(sell, lo,
+    hi)`` tuples as returned by `core.dist.row_shard_sells`). Each shard is
+    modeled independently — its *own* padded width, metadata stream, and
+    coalesce behavior — which is exactly why cost-balanced partitions beat
+    even slice splits on skewed matrices: the prediction is bound by the
+    straggler, and ``imbalance`` (max/mean shard cycles) is the metric the
+    partitioner minimizes and the multi-device bench job gates."""
+    sells = [s[0] if isinstance(s, tuple) else s for s in shards]
+    if not sells:
+        raise ValueError("sharded_spmv_perf needs at least one shard")
+    per = [
+        spmv_perf(
+            s, system, hw,
+            meta_bytes_per_elem=meta_bytes_per_elem,
+            value_bytes_per_elem=value_bytes_per_elem,
+        ).cycles
+        for s in sells
+    ]
+    # x is replicated to every device row before any shard's gathers can
+    # run: one full n_cols stream at channel bandwidth (device rows receive
+    # concurrently, so one copy is the critical-path cost).
+    n_cols = max(s.n_cols for s in sells)
+    broadcast = n_cols * hw.elem_bytes / hw.channel_bytes_per_cycle
+    mx = max(per)
+    mean = sum(per) / len(per)
+    cycles = mx + broadcast
+    return ShardedSpMVResult(
+        system=system,
+        n_shards=len(per),
+        shard_cycles=[float(c) for c in per],
+        max_shard_cycles=float(mx),
+        mean_shard_cycles=float(mean),
+        imbalance=float(mx / mean) if mean else 1.0,
+        broadcast_cycles=float(broadcast),
+        cycles=float(cycles),
+        runtime_ms=float(cycles / (hw.freq_ghz * 1e9) * 1e3),
     )
 
 
@@ -648,6 +725,7 @@ def plan_matmat_cycles(
     block_rows: int,
     hw: HWConfig = DEFAULT_HW,
     meta_bytes_per_elem: float | None = None,
+    value_bytes_per_elem: float | None = None,
     buffer_depth: int = 2,
 ) -> float:
     """Fused-matmat cycle cost of one *concrete plan geometry* — the model
@@ -662,7 +740,10 @@ def plan_matmat_cycles(
     ``meta_bytes_per_elem`` is the plan's metadata encoding width (packed
     `DevicePlan`: `coalescer.META_BYTES_PACKED` = 4; unpacked fallback:
     `META_BYTES_UNPACKED` = 8; default None keeps the raw ``hw.index_bytes``
-    stream). ``buffer_depth`` is the in-kernel VMEM pipeline depth — see
+    stream). ``value_bytes_per_elem`` is the SELL value-storage width (bf16
+    values: 2; default None keeps ``hw.elem_bytes``) — the tuner's
+    ``value_dtype`` knob prices its halved matrix-pass traffic through this
+    term. ``buffer_depth`` is the in-kernel VMEM pipeline depth — see
     `_fused_matmat_cycles` for the overlap semantics."""
     if k < 1 or k_tile < 1:
         raise ValueError(f"k and k_tile must be >= 1, got k={k}, "
@@ -684,7 +765,11 @@ def plan_matmat_cycles(
         + hw.row_miss_penalty_cycles * miss
     )
 
-    nz_bytes = nnz_p * hw.elem_bytes
+    value_bpe = (
+        float(hw.elem_bytes) if value_bytes_per_elem is None
+        else float(value_bytes_per_elem)
+    )
+    nz_bytes = nnz_p * value_bpe
     meta_bpe = (
         float(hw.index_bytes) if meta_bytes_per_elem is None
         else float(meta_bytes_per_elem)

@@ -1,5 +1,5 @@
 """Plan autotuner: search (cols_per_chunk, block_rows, k_tile, packed,
-buffer_depth) per matrix.
+buffer_depth, value_dtype) per matrix.
 
 The pallas plan has three coupled knobs and no hand-pickable sweet spot:
 `cols_per_chunk` sets both the coalescing window (``cols_per_chunk *
@@ -46,28 +46,32 @@ import numpy as np
 
 from . import schedule_store
 from .coalescer import META_BYTES_PACKED, META_BYTES_UNPACKED
-from .engine import SpMVEngine, _sell_content_digest, get_engine, \
-    resolve_backend
+from .engine import SpMVEngine, VALUE_DTYPES, _sell_content_digest, \
+    get_engine, resolve_backend, resolve_value_dtype, value_bytes_per_elem
 from .formats import CSRMatrix, SELLMatrix
 from .perfmodel import DEFAULT_HW, HWConfig, plan_matmat_cycles
 from .runtime import normalize_to_sell, pad_width
 
 TUNE_CACHE_ENV = "REPRO_TUNE_CACHE"
-TUNE_VERSION = 2  # v2: packed + buffer_depth joined the space (v1 winners
-# answer a smaller question and are deliberately re-searched)
+TUNE_VERSION = 3  # v3: value_dtype joined the space (v2: packed +
+# buffer_depth); earlier winners answer a smaller question and are
+# deliberately re-searched
 
 # The search space: every combination is a legal plan (cols_per_chunk widens
 # the window and the width padding together; block_rows is the wide-fetch
 # granularity; k_tile the fused RHS tile; packed toggles the 4-byte metadata
-# encoding; buffer_depth the manual VMEM pipeline depth). Deliberately small —
-# the tuner is rerun per matrix, and the persisted winner makes even the
-# model-mode search a one-time cost.
-DEFAULT_SPACE: Dict[str, Tuple[int, ...]] = {
+# encoding; buffer_depth the manual VMEM pipeline depth; value_dtype the
+# SELL value storage width — bf16 halves the value stream at a numerics
+# cost the caller owns). Deliberately small — the tuner is rerun per
+# matrix, and the persisted winner makes even the model-mode search a
+# one-time cost.
+DEFAULT_SPACE: Dict[str, Tuple] = {
     "cols_per_chunk": (4, 8, 16),
     "block_rows": (4, 8, 16),
     "k_tile": (4, 8, 16),
     "packed": (0, 1),
     "buffer_depth": (1, 2),
+    "value_dtype": ("native", "bf16"),
 }
 TUNE_MODES = ("model", "measure")
 
@@ -84,6 +88,7 @@ class TunedPlan:
     k_tile: int
     packed: int  # 0 | 1 — int (not bool) so the space/JSON stay uniform
     buffer_depth: int
+    value_dtype: str  # 'native' | 'bf16' | 'f32' (engine.VALUE_DTYPES)
     k: int
     backend: str  # resolved
     mode: str
@@ -141,10 +146,18 @@ def _normalize_space(
             f"unknown tune-space knobs {sorted(unknown)}; valid: "
             f"{sorted(DEFAULT_SPACE)}"
         )
-    out: Dict[str, Tuple[int, ...]] = {}
+    out: Dict[str, Tuple] = {}
     for knob in DEFAULT_SPACE:
-        values = tuple(sorted({int(v) for v in space.get(knob,
-                                                         DEFAULT_SPACE[knob])}))
+        raw = space.get(knob, DEFAULT_SPACE[knob])
+        if knob == "value_dtype":
+            values = tuple(sorted({str(v) for v in raw}))
+            if not values or any(v not in VALUE_DTYPES for v in values):
+                raise ValueError(
+                    f"tune-space knob 'value_dtype' must list strings in "
+                    f"{VALUE_DTYPES}, got {values}")
+            out[knob] = values
+            continue
+        values = tuple(sorted({int(v) for v in raw}))
         if knob == "packed":
             if not values or any(v not in (0, 1) for v in values):
                 raise ValueError(
@@ -236,6 +249,7 @@ def _load(
             k_tile=int(w["k_tile"]),
             packed=int(w["packed"]),
             buffer_depth=int(w["buffer_depth"]),
+            value_dtype=str(w["value_dtype"]),
             k=int(w["k"]),
             backend=str(w["backend"]),
             mode=str(w["mode"]),
@@ -249,6 +263,7 @@ def _load(
             or plan.k_tile not in space["k_tile"]
             or plan.packed not in space["packed"]
             or plan.buffer_depth not in space["buffer_depth"]
+            or plan.value_dtype not in space["value_dtype"]
             or plan.k != int(k)
             or plan.backend != backend
             or plan.mode != mode
@@ -298,6 +313,9 @@ def _model_search(
                 META_BYTES_PACKED if cand["packed"] else META_BYTES_UNPACKED
             ),
             buffer_depth=cand["buffer_depth"],
+            value_bytes_per_elem=value_bytes_per_elem(
+                cand["value_dtype"], hw=hw
+            ),
         )
         trials += 1
         if best is None or cost < best[0]:
@@ -335,6 +353,7 @@ def _measure_search(
             k_tile=cand["k_tile"],
             packed=bool(cand["packed"]),
             buffer_depth=cand["buffer_depth"],
+            value_dtype=resolve_value_dtype(cand["value_dtype"]),
         ))
     for eng in engines:  # compile + first-touch outside the timed rounds
         jax.block_until_ready(eng.matmat(X))
@@ -364,8 +383,8 @@ def autotune(
     cache_dir: Optional[str] = None,
     hw: HWConfig = DEFAULT_HW,
 ) -> TunedPlan:
-    """Find (cols_per_chunk, block_rows, k_tile, packed, buffer_depth) for
-    serving k-column matmats on this matrix. Returns the cached winner when one exists —
+    """Find (cols_per_chunk, block_rows, k_tile, packed, buffer_depth,
+    value_dtype) for serving k-column matmats on this matrix. Returns the cached winner when one exists —
     in-memory first, then the persistent store — running zero trials; only
     a genuinely new (matrix, k, backend, mode, space) combination searches.
     """
@@ -416,6 +435,7 @@ def autotune(
         k_tile=winner["k_tile"],
         packed=winner["packed"],
         buffer_depth=winner["buffer_depth"],
+        value_dtype=winner["value_dtype"],
         k=int(k),
         backend=resolved,
         mode=mode,
@@ -462,6 +482,7 @@ def get_tuned_engine(
         k_tile=plan.k_tile,
         packed=bool(plan.packed),
         buffer_depth=plan.buffer_depth,
+        value_dtype=resolve_value_dtype(plan.value_dtype),
         slice_height=slice_height,
         cache_dir=cache_dir,
     )

@@ -319,6 +319,7 @@ def serve_spmv(args) -> None:
             csr,
             mesh=mesh,
             backend=args.backend,
+            partition=args.partition,
             cache_dir=args.schedule_cache,
             **knobs,
         )
@@ -343,10 +344,19 @@ def serve_spmv(args) -> None:
             f"wide_accesses={rep['wide_accesses']} "
             f"coalesce_rate={rep['coalesce_rate']:.2f}"
         )
+        part = rep["partition"]
+        imb = part["imbalance"]
+        print(
+            f"  partition: {part['strategy']} "
+            f"imbalance={imb['ratio']:.3f} "
+            f"(max={imb['max_shard_cycles']:.0f} / "
+            f"mean={imb['mean_shard_cycles']:.0f} model cycles/shard)"
+        )
         for s in rep["shards"]:
             print(
-                f"    shard {s['shard']}: rows [{s['rows'][0]}, "
-                f"{s['rows'][1]}) window={s['window']} "
+                f"    shard {s['shard']} [{s['device_str']}]: rows "
+                f"[{s['rows'][0]}, {s['rows'][1]}) width={s['width']} "
+                f"window={s['window']} "
                 f"wide_accesses={s['wide_accesses']} "
                 f"coalesce_rate={s['coalesce_rate']:.2f} "
                 f"cached={s['schedule_cached']}"
@@ -462,10 +472,12 @@ def serve_spmv(args) -> None:
             flops = 2.0 * nnz_shard * (c1 - c0) * args.requests
             dev = blk["device"]
             per_dev[dev] = per_dev.get(dev, 0.0) + flops
+        from repro.core.dist import device_str
+
         print(f"  per-device throughput ({len(per_dev)} active devices):")
         for dev in sorted(per_dev, key=lambda d: d.id):
             print(
-                f"    {dev.platform.upper()}:{dev.id} "
+                f"    {device_str(dev)} "
                 f"{per_dev[dev] / max(dt, 1e-12) / 1e9:.3f} GFLOP/s"
             )
     stats = schedule_cache_stats()
@@ -540,6 +552,15 @@ def main() -> None:
         "auto-factors all visible devices, '4,2' pins explicit (data, "
         "model) sizes; row slices shard over data, RHS columns over model "
         "(core.dist.ShardedSpMVEngine)",
+    )
+    ap.add_argument(
+        "--partition", default="auto",
+        choices=("auto", "even", "nnz", "cost", "cost2d"),
+        help="row-shard partition strategy for --mesh "
+        "(core.partition.shard_bounds): 'even' splits slices uniformly, "
+        "'nnz' balances padded nnz, 'cost' balances the perf-model shard "
+        "cost (straggler-aware; what 'auto' resolves to), 'cost2d' adds a "
+        "column-segment grid to the objective",
     )
     ap.add_argument(
         "--stream", default=None, metavar="SPEC",

@@ -1,0 +1,379 @@
+"""Cost-balanced sharding (core.partition): strategy front door, min-max
+partition properties, per-shard width padding, and the acceptance parity —
+every strategy's sharded result is bit-identical to the single-device engine
+on the reference backend, including on the skewed matrices the partitioner
+exists for.
+
+Property tests use tests/_propcheck (hypothesis when installed, a seeded
+numpy fallback otherwise). The `slow` subprocess leg sweeps strategies on a
+forced 8-device CPU mesh, mirroring the CI multi-device job.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro.core import (
+    ShardedSpMVEngine,
+    SpMVEngine,
+    balanced_bounds,
+    clear_engine_cache,
+    clear_schedule_cache,
+    csr_to_sell,
+    even_bounds,
+    resolve_partition,
+    row_shard_sells,
+    shard_bounds,
+    shard_costs_for_bounds,
+    slice_costs,
+)
+from repro.core.matrices import make_spd, powerlaw
+from repro.core.partition import PARTITION_STRATEGIES
+from repro.core.solvers import cg
+
+REPO = Path(__file__).resolve().parent.parent
+RNG = np.random.default_rng(47)
+STRATEGIES = PARTITION_STRATEGIES + ("auto",)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_engine_cache()
+    clear_schedule_cache()
+    yield
+
+
+def _skewed_sell(n=640, avg_deg=6, skew=3.0, slice_height=8):
+    return csr_to_sell(
+        powerlaw(n, avg_deg, skew=skew)(np.random.default_rng(0)),
+        slice_height=slice_height,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Strategy front door + bounds invariants
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_partition():
+    assert resolve_partition("auto") == "cost"
+    for s in PARTITION_STRATEGIES:
+        assert resolve_partition(s) == s
+    with pytest.raises(ValueError, match="partition"):
+        resolve_partition("round-robin")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=40, max_value=400),
+    avg_deg=st.integers(min_value=2, max_value=10),
+    n_shards=st.integers(min_value=1, max_value=9),
+    skew=st.sampled_from([None, 2.0, 3.0]),
+    strategy=st.sampled_from(STRATEGIES),
+)
+def test_bounds_tile_slices_for_every_strategy(
+    n, avg_deg, n_shards, skew, strategy
+):
+    """Every strategy's bounds are a monotone slice tiling: n_shards + 1
+    entries (clamped to n_slices), endpoints pinned, strictly increasing —
+    the property that makes every shard a well-formed SELL matrix."""
+    sell = _skewed_sell(n, avg_deg, skew)
+    bounds, info = shard_bounds(sell, n_shards, partition=strategy)
+    eff = min(n_shards, sell.n_slices)
+    assert bounds.size == eff + 1
+    assert bounds[0] == 0 and bounds[-1] == sell.n_slices
+    assert (np.diff(bounds) >= 1).all()
+    assert info["strategy"] == resolve_partition(strategy)
+    assert info["n_shards"] == eff
+    assert len(info["shard_costs"]) == eff
+    assert info["cost_imbalance"] >= 1.0 - 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    costs=st.lists(
+        st.floats(min_value=0.0, max_value=100.0), min_size=1, max_size=60
+    ),
+    n_shards=st.integers(min_value=1, max_value=8),
+)
+def test_balanced_bounds_never_worse_than_even(costs, n_shards):
+    """balanced_bounds solves min-max over contiguous partitions, so its max
+    shard cost can never exceed the even slice-count split's max."""
+    costs = np.asarray(costs, dtype=np.float64)
+    n_shards = min(n_shards, costs.size)
+    bounds = balanced_bounds(costs, n_shards)
+    assert bounds.size == n_shards + 1
+    assert bounds[0] == 0 and bounds[-1] == costs.size
+    assert (np.diff(bounds) >= 1).all()
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])
+    max_bal = np.diff(prefix[bounds]).max()
+    max_even = np.diff(prefix[even_bounds(costs.size, n_shards)]).max()
+    assert max_bal <= max_even + 1e-9
+
+
+def test_balanced_bounds_validation():
+    with pytest.raises(ValueError, match="n_shards"):
+        balanced_bounds(np.ones(3), 4)
+    with pytest.raises(ValueError, match="non-negative"):
+        balanced_bounds(np.asarray([1.0, -2.0]), 1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    skew=st.sampled_from([2.0, 3.0, 4.0]),
+    n_shards=st.integers(min_value=2, max_value=8),
+)
+def test_cost_partition_max_cost_at_most_even(skew, n_shards):
+    """The 'cost' bisection optimizes the width-aware shard-cost objective
+    over all contiguous partitions — the even split is one of them, so the
+    cost partition's straggler can never be heavier."""
+    sell = _skewed_sell(512, 6, skew)
+    cost_b, _ = shard_bounds(sell, n_shards, partition="cost")
+    even_b, _ = shard_bounds(sell, n_shards, partition="even")
+    max_cost = shard_costs_for_bounds(sell, cost_b).max()
+    max_even = shard_costs_for_bounds(sell, even_b).max()
+    assert max_cost <= max_even * (1.0 + 1e-9)
+
+
+def test_cost_partition_strictly_better_on_skewed_matrix():
+    """Acceptance: on the skewed powerlaw family the cost strategy's
+    imbalance (max/mean shard cycles) is strictly below the even split's."""
+    sell = _skewed_sell(2048, 6, 3.0)
+    _, info_cost = shard_bounds(sell, 4, partition="cost")
+    _, info_even = shard_bounds(sell, 4, partition="even")
+    assert info_cost["cost_imbalance"] < info_even["cost_imbalance"]
+    assert info_even["cost_imbalance"] > 1.5  # the split is genuinely skewed
+
+
+def test_slice_costs_positive_and_slice_aligned():
+    sell = _skewed_sell(300, 5, 2.0)
+    costs = slice_costs(sell, window=256, block_rows=8)
+    assert costs.shape == (sell.n_slices,)
+    assert (costs > 0).all()
+    # value-dtype aware: halving value bytes can only lower slice cost
+    half = slice_costs(
+        sell, window=256, block_rows=8, value_bytes_per_elem=2.0
+    )
+    assert (half <= costs + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# Per-shard width padding
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_shards_tile_rows_with_per_shard_width(strategy):
+    sell = _skewed_sell(512, 6, 3.0)
+    W = int(sell.slice_widths.max())
+    shards = row_shard_sells(sell, 4, partition=strategy)
+    total_rows = 0
+    widths = []
+    prev_hi = 0
+    for shard, lo, hi in shards:
+        assert lo == prev_hi
+        prev_hi = hi
+        assert shard.n_rows == hi - lo
+        total_rows += shard.n_rows
+        Ws = int(np.max(shard.slice_widths, initial=0))
+        widths.append(Ws)
+        assert Ws <= W  # never wider than the global padded plan
+        assert (np.asarray(shard.slice_widths) == Ws).all()
+        shard.validate()
+    assert prev_hi == sell.n_rows and total_rows == sell.n_rows
+    # skewed matrix + degree-ordered rows: shard widths genuinely differ,
+    # i.e. at least one shard escaped the global straggler width
+    assert min(widths) < W
+
+
+def test_per_shard_padded_nnz_not_above_global_width_padding():
+    sell = _skewed_sell(512, 6, 3.0)
+    W = int(sell.slice_widths.max())
+    for strategy in STRATEGIES:
+        for shard, _, _ in row_shard_sells(sell, 4, partition=strategy):
+            assert shard.nnz_padded <= shard.n_slices * W * sell.slice_height
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: bit-identity across strategies + sharded CG
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_sharded_bit_identical_to_single_device_per_strategy(strategy):
+    """Reference-backend sharded matvec/matmat == single-device, bit for
+    bit, for every partition strategy on a skewed matrix (per-shard widths
+    all differ — the padding-invariant tree reduction is what's pinned)."""
+    sell = _skewed_sell(512, 6, 3.0)
+    X = jnp.asarray(RNG.standard_normal((sell.n_cols, 4)).astype(np.float32))
+    single = SpMVEngine(sell, backend="reference")
+    sharded = ShardedSpMVEngine(
+        sell, backend="reference", partition=strategy, n_shards=4
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sharded.matmat(X)), np.asarray(single.matmat(X))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sharded.matvec(X[:, 0])), np.asarray(single.matvec(X[:, 0]))
+    )
+
+
+def test_sharded_cg_on_cost_partitioned_skewed_spd():
+    """CG through matvec_parts stays correct with uneven cost-partitioned
+    shards (per-shard widths differ on the skewed SPD system)."""
+    csr = make_spd(powerlaw(320, 5, skew=3.0)(np.random.default_rng(2)))
+    sell = csr_to_sell(csr)
+    sharded = ShardedSpMVEngine(
+        sell, backend="reference", partition="cost", n_shards=4
+    )
+    widths = {
+        int(np.max(s.slice_widths, initial=0)) for s, _, _ in sharded._shards
+    }
+    assert len(widths) > 1  # the premise: genuinely uneven shards
+    b = jnp.asarray(
+        np.random.default_rng(3).standard_normal(320).astype(np.float32)
+    )
+    res_sh = cg(sharded, b, tol=1e-6)
+    assert res_sh.loop == "host" and res_sh.converged
+    res_single = cg(csr, b, tol=1e-6, backend="reference")
+    scale = max(1.0, np.abs(np.asarray(res_single.x)).max())
+    assert np.abs(
+        np.asarray(res_sh.x) - np.asarray(res_single.x)
+    ).max() <= 1e-5 * scale
+
+
+# ---------------------------------------------------------------------------
+# plan_report + placement surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_plan_report_partition_section_and_imbalance():
+    sell = _skewed_sell(512, 6, 3.0)
+    rep_cost = ShardedSpMVEngine(
+        sell, backend="reference", partition="cost", n_shards=4
+    ).plan_report()
+    rep_even = ShardedSpMVEngine(
+        sell, backend="reference", partition="even", n_shards=4
+    ).plan_report()
+    part = rep_cost["partition"]
+    assert part["strategy"] == "cost" and part["requested"] == "cost"
+    assert len(part["shard_costs"]) == 4
+    imb = part["imbalance"]
+    assert imb["ratio"] >= 1.0
+    assert imb["max_shard_cycles"] >= imb["mean_shard_cycles"]
+    assert part["perf"]["cycles"] >= imb["max_shard_cycles"]
+    # the partitioner's whole point, surfaced where serve prints it
+    assert imb["ratio"] < rep_even["partition"]["imbalance"]["ratio"]
+
+
+def test_placement_device_str_json_round_trip():
+    sell = _skewed_sell(256, 5, 2.0)
+    sharded = ShardedSpMVEngine(
+        sell, backend="reference", partition="cost", n_shards=3
+    )
+    blocks = sharded.placement(4)
+    payload = json.dumps([
+        {k: v for k, v in b.items() if k != "device"} for b in blocks
+    ])
+    back = json.loads(payload)
+    assert len(back) == len(blocks)
+    for b, orig in zip(back, blocks):
+        assert b["device_str"] == f"{orig['device'].platform}:{b['device_id']}"
+        assert b["width"] <= int(sell.slice_widths.max())
+
+
+# ---------------------------------------------------------------------------
+# powerlaw skew= satellite
+# ---------------------------------------------------------------------------
+
+
+def test_powerlaw_skew_seeded_and_backward_compatible():
+    legacy = powerlaw(257, 8)(np.random.default_rng(7))
+    default = powerlaw(257, 8, skew=None)(np.random.default_rng(7))
+    np.testing.assert_array_equal(legacy.indices, default.indices)
+    np.testing.assert_array_equal(legacy.data, default.data)
+    s1 = powerlaw(257, 8, skew=3.0)(np.random.default_rng(7))
+    s2 = powerlaw(257, 8, skew=3.0)(np.random.default_rng(7))
+    np.testing.assert_array_equal(s1.indices, s2.indices)
+    assert not np.array_equal(
+        np.diff(s1.indptr), np.diff(legacy.indptr)
+    )
+
+
+def test_powerlaw_skew_spreads_slice_widths():
+    """The knob's contract: heavier skew widens the width spread the
+    partitioner balances (degree-sorted rows cluster hubs into few slices)."""
+    flat = csr_to_sell(powerlaw(640, 6)(np.random.default_rng(0)))
+    skewed = _skewed_sell(640, 6, 3.0)
+    def spread(s):
+        w = np.asarray(s.slice_widths, dtype=np.float64)
+        return float(w.max() / max(np.median(w), 1.0))
+    assert spread(skewed) > spread(flat)
+    assert spread(skewed) >= 2.0
+    # degrees still land near the requested average
+    deg = np.diff(powerlaw(640, 6, skew=3.0)(np.random.default_rng(0)).indptr)
+    assert 3 <= deg.mean() <= 24
+
+
+# ---------------------------------------------------------------------------
+# Forced 8-device strategy sweep (mirrors the CI multi-device job)
+# ---------------------------------------------------------------------------
+
+
+PARTITION_SWEEP_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core import ShardedSpMVEngine, SpMVEngine, csr_to_sell
+    from repro.core.matrices import powerlaw
+
+    sell = csr_to_sell(powerlaw(1024, 6, skew=3.0)(np.random.default_rng(0)),
+                       slice_height=8)
+    X = jnp.asarray(np.random.default_rng(1)
+                    .standard_normal((sell.n_cols, 5)).astype(np.float32))
+    Y0 = np.asarray(SpMVEngine(sell, backend="reference").matmat(X))
+    out = {"n_dev": len(jax.devices()), "strategies": {}}
+    for strat in ("even", "nnz", "cost", "cost2d"):
+        sh = ShardedSpMVEngine(sell, backend="reference", partition=strat,
+                               n_shards=8)
+        rep = sh.plan_report()
+        out["strategies"][strat] = {
+            "bitwise": bool(np.array_equal(np.asarray(sh.matmat(X)), Y0)),
+            "imbalance": rep["partition"]["imbalance"]["ratio"],
+            "devices": len({b["device_str"] for b in sh.placement(5)}),
+        }
+    print(json.dumps(out))
+    """
+)
+
+
+@pytest.mark.slow
+def test_partition_sweep_on_forced_8_device_mesh():
+    """Acceptance on a real 8-device mesh: every strategy stays bit-identical
+    to the single-device engine, uses all devices, and the cost partition
+    beats the even split's imbalance on the skewed matrix."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", PARTITION_SWEEP_SNIPPET],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_dev"] == 8
+    strategies = res["strategies"]
+    assert set(strategies) == set(PARTITION_STRATEGIES)
+    for strat, row in strategies.items():
+        assert row["bitwise"], strat
+        assert row["devices"] == 8
+    assert strategies["cost"]["imbalance"] < strategies["even"]["imbalance"]

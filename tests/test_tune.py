@@ -23,7 +23,7 @@ from repro.core.tune import (
 )
 
 SELL = csr_to_sell(banded(256, 12, 0.7)(np.random.default_rng(0)))
-N_CANDIDATES = 108  # |DEFAULT_SPACE| = 3 * 3 * 3 * 2 * 2
+N_CANDIDATES = 216  # |DEFAULT_SPACE| = 3 * 3 * 3 * 2 * 2 * 2
 
 
 @pytest.fixture(autouse=True)
@@ -177,7 +177,8 @@ def test_measure_mode_reference_backend():
     plan = autotune(
         SELL, k=4, backend="reference", mode="measure",
         space={"cols_per_chunk": (8,), "block_rows": (4, 8), "k_tile": (8,),
-               "packed": (1,), "buffer_depth": (2,)},
+               "packed": (1,), "buffer_depth": (2,),
+               "value_dtype": ("native",)},
         rounds=2,
     )
     assert plan.source == "search" and plan.mode == "measure"

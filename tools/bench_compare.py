@@ -86,6 +86,22 @@ def extract_metrics(kind: str, payload: dict) -> List[Tuple[str, float, str]]:
                 f"packed/{name}/traffic_reduction",
                 float(row["traffic_reduction"]), "model",
             ))
+        part = payload.get("sharded_partition") or {}
+        strategies = part.get("strategies") or {}
+        if "even" in strategies and "cost" in strategies:
+            # imbalance is lower-is-better; the tracked metric is the
+            # cost partitioner's gain over the even split (deterministic
+            # model output, not a timing)
+            metrics.append((
+                "sharded/partition/imbalance_gain",
+                float(strategies["even"]["imbalance"])
+                / float(strategies["cost"]["imbalance"]), "model",
+            ))
+        for name, row in (payload.get("value_dtypes") or {}).items():
+            metrics.append((
+                f"values/{name}/traffic_reduction",
+                float(row["traffic_reduction"]), "model",
+            ))
     elif kind == "matmat":
         mm = payload.get("matmat") or {}
         thr = mm.get("throughput") or {}
