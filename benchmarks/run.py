@@ -23,6 +23,12 @@ STREAM_JSON = "BENCH_stream.json"
 MATMAT_JSON = "BENCH_matmat.json"
 SOLVE_JSON = "BENCH_solve.json"
 DECODE_JSON = "BENCH_decode.json"
+CHAOS_JSON = "BENCH_chaos.json"
+# Retrying a failed micro-batch re-stages and recomputes it, so a chaos run
+# with one injected timeout costs at most one extra micro-batch plus the
+# retry bookkeeping. The overhead row is informational (timings on shared CI
+# CPUs drift); the *gate* is on recovery_rate and parity.
+CHAOS_RETRY_BUDGET = 2
 # Streamed serving must not be slower than the synchronous loop. Gated on
 # the median of paired per-trial ratios (drift-cancelling); the margin
 # absorbs residual CPU jitter — a real pipelining regression blows well
@@ -1042,6 +1048,238 @@ def _decode_gate(decode: dict) -> dict:
     return bad
 
 
+def _chaos_smoke() -> dict:
+    """Deterministic fault-injection drills through `core.faults` + the
+    recovery machinery each one gates.
+
+    Four drills, every one comparing the chaos run against its fault-free
+    oracle on the reference backend (bit-identical is the contract):
+
+      * store corruption — a warm on-disk schedule is corrupted before the
+        cold read; the store must quarantine (``*.bad``), rebuild, and
+        re-persist, and the rebuilt plan must serve identical results.
+      * store write — two injected transient ENOSPC errors inside the atomic
+        write; bounded retry must land the file anyway.
+      * streaming retry — an injected micro-batch dispatch timeout healed by
+        `StreamingExecutor(retries=...)`; the overhead row measures the
+        retry cost against a clean streamed run of the same workload.
+      * sharded degraded mode — an injected shard dispatch failure recovered
+        by the reference recompute path.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import faults
+    from repro.core.dist import ShardedSpMVEngine
+    from repro.core.engine import (
+        clear_engine_cache, clear_schedule_cache, get_engine,
+        schedule_cache_stats,
+    )
+    from repro.core.formats import csr_to_sell
+    from repro.core.matrices import banded
+    from repro.core.runtime import StreamingExecutor
+    from .common import emit
+
+    csr = banded(1024, 16, 0.7)(np.random.default_rng(0))
+    sell = csr_to_sell(csr)
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(
+        rng.standard_normal((sell.n_cols, 8)).astype(np.float32)
+    )
+    out: dict = {}
+
+    # --- store corruption: quarantine + rebuild, cold-start parity
+    cache_dir = tempfile.mkdtemp(prefix="bench-chaos-")
+    try:
+        clear_engine_cache()
+        clear_schedule_cache()
+        eng = get_engine(sell, backend="reference", cache_dir=cache_dir)
+        y_free = np.asarray(eng.matmat(X))  # warms the disk cache
+        clear_engine_cache()
+        clear_schedule_cache()
+        with faults.FaultPlan("store_read:rate=1,count=1") as plan:
+            eng2 = get_engine(sell, backend="reference", cache_dir=cache_dir)
+            y_chaos = np.asarray(eng2.matmat(X))
+        stats = schedule_cache_stats()
+        rep = plan.report()
+        err = float(np.abs(y_chaos - y_free).max())
+        # third cold start: the rebuilt file must serve a clean warm hit
+        clear_engine_cache()
+        clear_schedule_cache()
+        eng3 = get_engine(sell, backend="reference", cache_dir=cache_dir)
+        err_rebuilt = float(np.abs(np.asarray(eng3.matmat(X)) - y_free).max())
+        rebuilt_hits = schedule_cache_stats()["disk_hits"]
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    out["store_read"] = {
+        "injected": rep["injected"],
+        "recovered": rep["recovered"],
+        "quarantined": stats["quarantined"],
+        "rebuilds": stats["rebuilds"],
+        "max_abs_err": err,
+        "rebuilt_cold_start_err": err_rebuilt,
+        "rebuilt_disk_hits": rebuilt_hits,
+    }
+    emit(
+        "chaos/store_read/quarantine_rebuild", 0.0,
+        f"n={sell.n_rows};injected={rep['injected']};"
+        f"recovered={rep['recovered']};quarantined={stats['quarantined']};"
+        f"rebuilds={stats['rebuilds']};max_abs_err={err:.2e}",
+    )
+
+    # --- store write: transient ENOSPC absorbed by bounded retry
+    cache_dir = tempfile.mkdtemp(prefix="bench-chaos-")
+    try:
+        clear_engine_cache()
+        clear_schedule_cache()
+        with faults.FaultPlan("store_write:rate=1,count=2") as plan:
+            eng = get_engine(sell, backend="reference", cache_dir=cache_dir)
+            eng.plan_report()  # forces plan + write-through save
+        stats = schedule_cache_stats()
+        rep = plan.report()
+        saved = stats["disk_saves"] == 1 and stats["save_errors"] == 0
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    out["store_write"] = {
+        "injected": rep["injected"],
+        "recovered": rep["recovered"],
+        "retries": stats["retries"],
+        "saved": bool(saved),
+    }
+    emit(
+        "chaos/store_write/retry", 0.0,
+        f"injected={rep['injected']};recovered={rep['recovered']};"
+        f"retries={stats['retries']};saved={saved}",
+    )
+
+    # --- streaming retry: injected dispatch timeout + the overhead row
+    clear_engine_cache()
+    clear_schedule_cache()
+    engine = get_engine(sell, backend="reference")
+    n_requests, microbatch = 8, 4
+    batches = [
+        rng.standard_normal((sell.n_cols, 8)).astype(np.float32)
+        for _ in range(n_requests)
+    ]
+    y_expect = [np.asarray(engine.matmat(B)) for B in batches]
+    streamer = StreamingExecutor(
+        engine, microbatch=microbatch, depth=2, retries=CHAOS_RETRY_BUDGET
+    )
+
+    def loop() -> list:
+        for B in batches:
+            streamer.submit(B)
+        outs = streamer.drain()
+        jax.block_until_ready(list(outs))
+        return outs
+
+    loop()  # warm
+    t0 = time.perf_counter()
+    loop()
+    clean_us = (time.perf_counter() - t0) * 1e6
+    with faults.FaultPlan("dispatch_timeout:after=3,count=2") as plan:
+        t0 = time.perf_counter()
+        outs = loop()
+        chaos_us = (time.perf_counter() - t0) * 1e6
+    rep = plan.report()
+    err_stream = max(
+        float(np.abs(np.asarray(y) - y_expect[i]).max())
+        for i, y in enumerate(outs)
+    )
+    overhead = chaos_us / max(clean_us, 1e-9)
+    out["stream_retry"] = {
+        "injected": rep["injected"],
+        "recovered": rep["recovered"],
+        "retries": streamer.stats["retries"],
+        "failures": len(outs.failures),
+        "max_abs_err": err_stream,
+        "clean_us": round(clean_us, 1),
+        "chaos_us": round(chaos_us, 1),
+        "retry_overhead": round(overhead, 3),
+    }
+    emit("chaos/stream/clean", clean_us,
+         f"requests={n_requests};microbatch={microbatch}")
+    emit(
+        "chaos/stream/retry", chaos_us,
+        f"injected={rep['injected']};recovered={rep['recovered']};"
+        f"retries={streamer.stats['retries']};"
+        f"overhead={overhead:.2f};max_abs_err={err_stream:.2e}",
+    )
+
+    # --- sharded degraded mode: shard failure -> reference recompute
+    sharded = ShardedSpMVEngine(sell, backend="reference")
+    y_free = np.asarray(sharded.matmat(X))
+    with faults.FaultPlan("shard_fail:rate=1,count=1") as plan:
+        y_chaos = np.asarray(sharded.matmat(X))
+    rep = plan.report()
+    rec = sharded.recovery_report()
+    err_shard = float(np.abs(y_chaos - y_free).max())
+    out["shard_fail"] = {
+        "injected": rep["injected"],
+        "recovered": rep["recovered"],
+        "recovery_events": rec["recovered"],
+        "max_abs_err": err_shard,
+        "mesh": [sharded.n_data, sharded.n_model],
+        "n_shards": sharded.n_shards,
+    }
+    emit(
+        "chaos/shard_fail/degraded_mode", 0.0,
+        f"shards={sharded.n_shards};injected={rep['injected']};"
+        f"recovered={rep['recovered']};max_abs_err={err_shard:.2e}",
+    )
+
+    injected = sum(d["injected"] for d in out.values())
+    recovered = sum(d["recovered"] for d in out.values())
+    out["totals"] = {
+        "injected": injected,
+        "recovered": recovered,
+        "recovery_rate": recovered / injected if injected else 0.0,
+    }
+    emit(
+        "chaos/totals", 0.0,
+        f"injected={injected};recovered={recovered};"
+        f"recovery_rate={out['totals']['recovery_rate']:.2f}",
+    )
+    return out
+
+
+def _chaos_gate(chaos: dict) -> dict:
+    """Chaos failures, empty when clean: every drill must inject at least
+    one fault, recover every injected fault, and stay bit-identical to its
+    fault-free oracle on the reference backend; the corrupted file must be
+    quarantined exactly once and rebuilt, the retried write must land, and
+    the streamed pipeline must report zero failed batches. (NaN comparisons
+    are written to fail, as in the other gates.)"""
+    bad = {}
+    for drill in ("store_read", "store_write", "stream_retry", "shard_fail"):
+        row = chaos[drill]
+        if row["injected"] < 1:
+            bad[f"chaos-{drill}-injected"] = row["injected"]
+        if row["recovered"] != row["injected"]:
+            bad[f"chaos-{drill}-unrecovered"] = (
+                row["injected"], row["recovered"]
+            )
+        if "max_abs_err" in row and not (row["max_abs_err"] == 0.0):
+            bad[f"chaos-{drill}-parity"] = row["max_abs_err"]
+    sr = chaos["store_read"]
+    if sr["quarantined"] != 1 or sr["rebuilds"] != 1:
+        bad["chaos-store-read-heal"] = (sr["quarantined"], sr["rebuilds"])
+    if not (sr["rebuilt_cold_start_err"] == 0.0):
+        bad["chaos-store-read-rebuilt-parity"] = sr["rebuilt_cold_start_err"]
+    if sr["rebuilt_disk_hits"] != 1:
+        bad["chaos-store-read-rebuilt-hits"] = sr["rebuilt_disk_hits"]
+    if not chaos["store_write"]["saved"]:
+        bad["chaos-store-write-saved"] = False
+    if chaos["stream_retry"]["failures"] != 0:
+        bad["chaos-stream-failures"] = chaos["stream_retry"]["failures"]
+    if not (chaos["totals"]["recovery_rate"] == 1.0):
+        bad["chaos-recovery-rate"] = chaos["totals"]["recovery_rate"]
+    return bad
+
+
 def _solve_gate(solve: dict) -> dict:
     """Solver failures, empty when clean: CG must converge with the
     independently recomputed relative residual under 10x its tolerance;
@@ -1145,15 +1383,27 @@ def main() -> None:
         "steady-state), and shared-prefix wide-fetch dedup vs disjoint "
         "requests (implies ci scale)",
     )
+    ap.add_argument(
+        "--chaos", action="store_true",
+        help="deterministic fault-injection drills (core.faults) through "
+        "the self-healing store, streaming retry, and sharded degraded "
+        "mode; writes BENCH_chaos.json and gates 100%% recovery plus "
+        "bit-identical parity with each drill's fault-free oracle "
+        "(implies ci scale)",
+    )
     args = ap.parse_args()
-    if args.smoke or args.stream or args.matmat or args.solve or args.decode:
+    quick = (
+        args.smoke or args.stream or args.matmat or args.solve
+        or args.decode or args.chaos
+    )
+    if quick:
         os.environ["BENCH_SCALE"] = "ci"  # before .common reads it
 
     t0 = time.time()
     from . import common, engine_cache, fig5_spmv
 
     print("name,us_per_call,derived")
-    if args.smoke or args.stream or args.matmat or args.solve or args.decode:
+    if quick:
         parity: dict = {}
         sharded = None
         packed_plans = None
@@ -1172,6 +1422,7 @@ def main() -> None:
         matmat = _matmat_smoke() if args.matmat else None
         solve = _solve_smoke() if args.solve else None
         decode = _decode_smoke() if args.decode else None
+        chaos = _chaos_smoke() if args.chaos else None
         total_s = time.time() - t0
         bad = {k: v for k, v in parity.items() if not (v <= PARITY_TOL)}
         if args.smoke:
@@ -1268,6 +1519,22 @@ def main() -> None:
                 f"dedup_ratio {decode['shared_prefix']['dedup_ratio']:.2f})"
             )
             bad.update(_decode_gate(decode))
+        if chaos is not None:
+            chaos_payload = {
+                "scale": os.environ.get("BENCH_SCALE", "ci"),
+                "chaos": chaos,
+                "rows": [
+                    r for r in common.rows() if r["name"].startswith("chaos/")
+                ],
+            }
+            with open(CHAOS_JSON, "w") as f:
+                json.dump(chaos_payload, f, indent=2)
+            print(
+                f"# wrote {CHAOS_JSON} "
+                f"({chaos['totals']['injected']} faults injected, "
+                f"recovery_rate {chaos['totals']['recovery_rate']:.2f})"
+            )
+            bad.update(_chaos_gate(chaos))
         print(f"# total {total_s:.1f}s (smoke)")
         if bad:
             print(

@@ -48,13 +48,21 @@ from .partition import (  # noqa: F401
     slice_nnz,
 )
 from .runtime import (  # noqa: F401
+    BatchFailure,
+    DrainResult,
     Executor,
     StreamHandle,
+    StreamTimeout,
     StreamingExecutor,
     column_groups,
     microbatch_slices,
     normalize_to_sell,
     parse_stream_spec,
+)
+from .faults import (  # noqa: F401
+    FaultInjected,
+    FaultPlan,
+    parse_fault_spec,
 )
 from .schedule_store import (  # noqa: F401
     CACHE_DIR_ENV,

@@ -53,12 +53,14 @@ micro-batch with compute on the previous one across the whole mesh.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import faults
 from .coalescer import META_BYTES_PACKED, META_BYTES_UNPACKED, \
     coalesce_stats, schedule_meta_bytes
 from .engine import DEFAULT_BUFFER_DEPTH, DEFAULT_COLS_PER_CHUNK, \
@@ -159,15 +161,29 @@ class _StagedRHS:
     dtype: object
 
 
+class _FailedShard:
+    """Placeholder for a shard whose dispatch died (really or by injection).
+    `finalize` recomputes the row-slice in degraded mode instead of
+    gathering it."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
+
+
 @dataclasses.dataclass
 class _PendingBlocks:
     """Dispatched-but-ungathered block results (the `dispatch` half).
     Carries k/dtype so `finalize` assembles the k=0 edge exactly like
-    `matmat` does — the Executor identity holds for every input."""
+    `matmat` does — the Executor identity holds for every input — and the
+    staged RHS so degraded-mode recovery can recompute a failed shard's
+    rows from source."""
 
     blocks: List[List[jnp.ndarray]]
     k: int
     dtype: object
+    staged: Optional["_StagedRHS"] = None
 
 
 class ShardedSpMVEngine:
@@ -269,6 +285,11 @@ class ShardedSpMVEngine:
             for shard, _, _ in self._shards
         ]
         self.row_ranges = [(lo, hi) for _, lo, hi in self._shards]
+        # Degraded-mode recovery log: one entry per shard recomputed via the
+        # reference executor after a dispatch/gather failure (see
+        # `_recover_shard`); surfaced by `plan_report()["recovery"]`.
+        self._recovery_events: List[Dict[str, object]] = []
+        self._recovery_lock = threading.Lock()
 
     # -- placement ---------------------------------------------------------
 
@@ -407,29 +428,116 @@ class ShardedSpMVEngine:
 
     def dispatch(self, staged: _StagedRHS) -> _PendingBlocks:
         """Launch every (row-shard, column-group) block matmat on its staged
-        RHS — all async (JAX dispatch), no host synchronization."""
+        RHS — all async (JAX dispatch), no host synchronization.
+
+        A shard whose dispatch raises (for real, or via the chaos harness's
+        ``shard_fail`` site) does not poison the others: its slot carries a
+        `_FailedShard` marker and `finalize` recomputes those rows in
+        degraded mode."""
         blocks: List[List[jnp.ndarray]] = []
         for i, eng in enumerate(self.engines):
             d = self._shard_device_row(i)
-            blocks.append([
-                eng.matmat(staged.placed[(d, j)])
-                for j in range(len(staged.groups))
-            ])
-        return _PendingBlocks(blocks=blocks, k=staged.k, dtype=staged.dtype)
+            try:
+                faults.maybe_inject(
+                    "shard_fail", f"injected dispatch failure on shard {i}"
+                )
+                blocks.append([
+                    eng.matmat(staged.placed[(d, j)])
+                    for j in range(len(staged.groups))
+                ])
+            except Exception as exc:
+                blocks.append(_FailedShard(exc))
+        return _PendingBlocks(
+            blocks=blocks, k=staged.k, dtype=staged.dtype, staged=staged
+        )
 
     def finalize(self, pending: _PendingBlocks) -> np.ndarray:
         """Gather all in-flight blocks (device->host copies synchronize) and
-        assemble the (n_rows, k) result."""
+        assemble the (n_rows, k) result.
+
+        Degraded mode: a shard marked failed at dispatch — or whose gather
+        raises here — has its row-slice recomputed via the *reference*
+        executor on a surviving device. Per-shard planning makes the
+        recompute bit-identical to the fault-free run on the reference
+        backend (and within kernel parity tolerance of a pallas run); each
+        recovery is logged in ``plan_report()["recovery"]``."""
         if pending.k == 0:  # no groups were dispatched; nothing to gather
             return np.zeros((self.sell.n_rows, 0), pending.dtype)
-        rows = [
-            np.concatenate([np.asarray(b) for b in row], axis=1)
-            if len(row) > 1 else np.asarray(row[0])
-            for row in pending.blocks
-        ]
+        rows = []
+        for i, row in enumerate(pending.blocks):
+            if isinstance(row, _FailedShard):
+                rows.append(self._recover_shard(i, pending, row.error))
+                continue
+            try:
+                rows.append(
+                    np.concatenate([np.asarray(b) for b in row], axis=1)
+                    if len(row) > 1 else np.asarray(row[0])
+                )
+            except Exception as exc:
+                rows.append(self._recover_shard(i, pending, exc))
         return np.concatenate(rows, axis=0)
 
+    def _recover_shard(
+        self, i: int, pending: _PendingBlocks, error: BaseException
+    ) -> np.ndarray:
+        """Recompute shard *i*'s row block through the reference executor.
+
+        The recovery engine shares the failed shard's SELL slice, geometry,
+        and value dtype (all numerics-relevant knobs), so on the reference
+        backend the recomputed rows are bit-identical to what the healthy
+        dispatch would have produced — the reference executor's width
+        reduction is padding-invariant, so even differing pad widths cannot
+        perturb the sums. The recompute is dispatched on a surviving mesh
+        row's device (the next row, when the mesh has more than one)."""
+        if pending.staged is None:
+            raise error
+        staged = pending.staged
+        d = self._shard_device_row(i)
+        ref_eng = get_engine(
+            self._shards[i][0],
+            window=self.window,
+            block_rows=self.block_rows,
+            backend="reference",
+            value_dtype=self.engines[i].value_dtype,
+        )
+        survivor = (d + 1) % self.n_data if self.n_data > 1 else d
+        parts = []
+        for j in range(len(staged.groups)):
+            block = staged.placed[(d, j)]
+            if self.n_data > 1:
+                block = jax.device_put(block, self.devices[survivor, j])
+            parts.append(np.asarray(ref_eng.matmat(block)))
+        result = (
+            np.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+        )
+        event = {
+            "shard": i,
+            "rows": self.row_ranges[i],
+            "k": pending.k,
+            "error": repr(error),
+            "injected": isinstance(error, faults.FaultInjected),
+            "mode": "reference-recompute",
+            "device_str": device_str(self.devices[survivor, 0]),
+        }
+        with self._recovery_lock:
+            self._recovery_events.append(event)
+        if isinstance(error, faults.FaultInjected):
+            faults.note_recovered(error.site)
+        return result
+
     # -- introspection / persistence ---------------------------------------
+
+    def recovery_report(self) -> Dict[str, object]:
+        """Degraded-mode recovery log: every shard row-slice recomputed via
+        the reference executor after a dispatch/gather failure, plus counts
+        split by injected (chaos harness) vs organic failures."""
+        with self._recovery_lock:
+            events = [dict(e) for e in self._recovery_events]
+        return {
+            "events": events,
+            "recovered": len(events),
+            "injected": sum(1 for e in events if e["injected"]),
+        }
 
     def persist_schedules(self, cache_dir: Optional[str] = None) -> List[str]:
         """Write every shard's already-built schedule to the persistent
@@ -545,6 +653,7 @@ class ShardedSpMVEngine:
                 if total_wide else 0.0
             ),
             "partition": partition_report,
+            "recovery": self.recovery_report(),
             "shards": shard_reports,
             **({"streaming": streaming} if streaming is not None else {}),
             **({"matmat": matmat} if matmat is not None else {}),

@@ -67,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import schedule_store
+from . import faults, schedule_store
 from .coalescer import BlockSchedule, META_BYTES_PACKED, \
     META_BYTES_UNPACKED, build_block_schedule, coalesce_stats, \
     packable_schedule, schedule_gather_reference, schedule_meta_bytes, \
@@ -307,7 +307,18 @@ _engine_lock = threading.RLock()
 # counts actual `build_block_schedule` invocations (the cost persistence
 # exists to avoid), the disk_* counters observe the persistent layer. The CI
 # round-trip gate asserts built == 0 for a cold process with a warm disk cache.
-_plan_stats = {"built": 0, "disk_hits": 0, "disk_rejects": 0, "disk_saves": 0}
+_plan_stats = {
+    "built": 0,
+    "disk_hits": 0,
+    "disk_rejects": 0,
+    "disk_saves": 0,
+    # Self-healing counters: a `rebuild` is a plan rebuilt because its disk
+    # file failed validation and was quarantined (`*.bad`); `save_errors`
+    # counts writes that still failed after the store's bounded retries
+    # (persistence degrades to memory-only rather than failing planning).
+    "rebuilds": 0,
+    "save_errors": 0,
+}
 _plan_stats_lock = threading.Lock()
 
 # Per-plan-key build locks: concurrent planners of the *same* stream
@@ -402,6 +413,7 @@ def cached_block_schedule(
 
         cache_dir = schedule_store.resolve_cache_dir(cache_dir)
         path = None
+        rebuilding = False
         if cache_dir:
             path = schedule_store.schedule_path(
                 cache_dir, digest, window=window, block_rows=block_rows,
@@ -420,7 +432,12 @@ def cached_block_schedule(
                     _schedule_cache.put(key, sched)
                     return sched, True
                 except schedule_store.ScheduleCacheMismatch:
+                    # Self-healing: move the broken file out of the way so
+                    # the rebuild below can persist a fresh one, and so the
+                    # next cold process doesn't trip over the same bytes.
                     _bump("disk_rejects")
+                    schedule_store.quarantine(path)
+                    rebuilding = True
 
         sched = build_block_schedule(
             jnp.asarray(np.asarray(indices, dtype=np.int32)),
@@ -437,13 +454,30 @@ def cached_block_schedule(
         )
         sched = trim_schedule_warps(sched)
         _bump("built")
+        if rebuilding:
+            _bump("rebuilds")
+            faults.note_recovered("store_read")
         _schedule_cache.put(key, sched)
         if path is not None:
-            schedule_store.save_schedule(
+            _save_best_effort(
                 path, sched, stream_digest=digest, matrix_digest=matrix_digest
             )
-            _bump("disk_saves")
         return sched, False
+
+
+def _save_best_effort(path, sched, *, stream_digest, matrix_digest) -> None:
+    """Persist a plan, degrading to memory-only if the disk stays broken.
+
+    `save_schedule` already retries transient errors with backoff; if the
+    write *still* fails, losing persistence must not fail the computation —
+    the freshly built plan is live in the memory cache."""
+    try:
+        schedule_store.save_schedule(
+            path, sched, stream_digest=stream_digest, matrix_digest=matrix_digest
+        )
+        _bump("disk_saves")
+    except OSError:
+        _bump("save_errors")
 
 
 def _write_through_if_missing(
@@ -474,13 +508,14 @@ def _write_through_if_missing(
     # bump (the write itself is atomic either way; the counter isn't).
     with _build_lock_for((digest, window, block_rows, max_warps)):
         if not os.path.exists(path):
-            schedule_store.save_schedule(
+            _save_best_effort(
                 path, sched, stream_digest=digest, matrix_digest=matrix_digest
             )
-            _bump("disk_saves")
 
 
 def schedule_cache_stats() -> Dict[str, int]:
+    """Plan-cache counters plus the persistence layer's IO-health counters
+    (``quarantined`` / ``retries`` from `schedule_store.store_io_stats`)."""
     with _plan_stats_lock:
         snapshot = dict(_plan_stats)
     return {
@@ -488,16 +523,18 @@ def schedule_cache_stats() -> Dict[str, int]:
         "hits": _schedule_cache.hits,
         "misses": _schedule_cache.misses,
         **snapshot,
+        **schedule_store.store_io_stats(),
     }
 
 
 def clear_schedule_cache() -> None:
     """Empty the in-memory schedule cache and zero all counters (including
-    the plan/disk counters — on-disk files are untouched)."""
+    the plan/disk and IO-health counters — on-disk files are untouched)."""
     _schedule_cache.clear()
     with _plan_stats_lock:
         for k in _plan_stats:
             _plan_stats[k] = 0
+    schedule_store.clear_store_io_stats()
 
 
 def clear_engine_cache() -> None:
@@ -726,11 +763,10 @@ class SpMVEngine:
                 block_rows=self.block_rows, matrix_digest=matrix_digest,
             )
             if not os.path.exists(path):
-                schedule_store.save_schedule(
+                _save_best_effort(
                     path, self._schedule, stream_digest=digest,
                     matrix_digest=matrix_digest,
                 )
-                _bump("disk_saves")
             return path
 
     def _ensure_compiled(self):
@@ -994,6 +1030,13 @@ class SpMVEngine:
             "schedule_cached": self.plan_cached,
             "wide_accesses": wide,
             "coalesce_rate": rate,
+            # Persistence-health snapshot: quarantined/.bad files, retried
+            # transient IO, and plans rebuilt after quarantine (process-wide
+            # counters — the chaos harness and ops dashboards read these).
+            "cache_health": {
+                key: schedule_cache_stats()[key]
+                for key in ("quarantined", "retries", "rebuilds", "save_errors")
+            },
             "perf": {
                 system: dataclasses.asdict(self.perf(system, hw))
                 for system in ("base", "pack0", "pack256")

@@ -62,6 +62,7 @@ from .engine import (
     _ENGINE_CACHE_MAX,
     _LRUCache,
     _bump,
+    _save_best_effort,
     cached_block_schedule,
     resolve_backend,
     resolve_packed,
@@ -216,10 +217,10 @@ class GatherEngine:
                 block_rows=self.block_rows, max_warps=self.max_warps,
             )
             if not os.path.exists(path):
-                schedule_store.save_schedule(
-                    path, self._schedule, stream_digest=self.digest
+                _save_best_effort(
+                    path, self._schedule, stream_digest=self.digest,
+                    matrix_digest=None,
                 )
-                _bump("disk_saves")
             return path
 
     @property

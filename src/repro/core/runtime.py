@@ -42,6 +42,7 @@ on its own.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Protocol, Tuple, Union, \
@@ -51,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import faults
 from .formats import CSRMatrix, SELLMatrix, csr_to_sell
 
 DEFAULT_MICROBATCH = 32
@@ -280,6 +282,12 @@ class StreamHandle:
         self._dtype = dtype
         self._error: Optional[BaseException] = None
         self._collected = False
+        self.retries = 0  # micro-batch retries spent on this batch
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The failure recorded for this batch, if any (after retries)."""
+        return self._error
 
     @property
     def done(self) -> bool:
@@ -322,19 +330,53 @@ class StreamHandle:
         return jnp.concatenate([jnp.asarray(p) for p in self._parts], axis=1)
 
 
+class StreamTimeout(RuntimeError):
+    """A micro-batch's device sync exceeded the pipeline's `timeout`."""
+
+
+@dataclasses.dataclass
+class BatchFailure:
+    """One submitted batch that still failed after the pipeline's bounded
+    retries — `drain()` reports these instead of raising."""
+
+    index: int  # position in submission order among that drain's batches
+    k: int
+    error: BaseException
+    retries: int
+
+
+class DrainResult(list):
+    """`drain()`'s return value: the healthy batch results in submission
+    order (it *is* a list, so existing `drain() == []` / iteration idioms
+    hold), plus `failures` — the structured report of batches that failed
+    after retries. A healthy drain has ``failures == []``."""
+
+    def __init__(self, results=(), failures: Optional[List[BatchFailure]] = None):
+        super().__init__(results)
+        self.failures: List[BatchFailure] = list(failures or ())
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+
 class _InflightEntry:
     """One reserved slot in the in-flight window. The slot is reserved
     (appended) under the pipeline lock, but its stage/dispatch runs outside
     the lock — `ready` flips once `pending` holds the dispatched work, and
-    retirement only touches ready entries."""
+    retirement only touches ready entries. `X`/`sl` are kept so a failed
+    micro-batch can be re-staged from source for a retry."""
 
-    __slots__ = ("handle", "idx", "pending", "ready")
+    __slots__ = ("handle", "idx", "pending", "ready", "X", "sl", "attempts")
 
-    def __init__(self, handle: StreamHandle, idx: int) -> None:
+    def __init__(self, handle: StreamHandle, idx: int, X=None, sl=None) -> None:
         self.handle = handle
         self.idx = idx
         self.pending: Any = None
         self.ready = False
+        self.X = X
+        self.sl = sl
+        self.attempts = 0
 
 
 class StreamingExecutor:
@@ -377,11 +419,18 @@ class StreamingExecutor:
         microbatch: int = DEFAULT_MICROBATCH,
         depth: int = DEFAULT_DEPTH,
         donate: bool = True,
+        timeout: Optional[float] = None,
+        retries: int = 0,
+        validate: bool = False,
     ) -> None:
         if microbatch < 1:
             raise ValueError(f"microbatch must be >= 1, got {microbatch}")
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
+        if timeout is not None and not timeout > 0:
+            raise ValueError(f"timeout must be > 0 seconds, got {timeout}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
         for hook in ("matmat", "stage", "dispatch", "finalize"):
             if not callable(getattr(executor, hook, None)):
                 raise TypeError(
@@ -393,12 +442,29 @@ class StreamingExecutor:
         self.microbatch = int(microbatch)
         self.depth = int(depth)
         self.donate = bool(donate)
+        # Fault tolerance: `timeout` bounds each micro-batch's device sync
+        # (`finalize`) in seconds; `retries` bounds how many times a failed
+        # or timed-out micro-batch is re-staged from source before its batch
+        # is reported failed; `validate` rejects NaN/Inf RHS values at
+        # staging time with a clear error instead of streaming poison.
+        self.timeout = None if timeout is None else float(timeout)
+        self.retries = int(retries)
+        self.validate = bool(validate)
+        self._stats = {"retries": 0, "timeouts": 0, "failures": 0}
         # Guards _inflight/_submitted/handle state. Notified on every state
         # change (reserve, ready, pop, delivery) so waiters re-check their
         # predicate.
         self._cv = threading.Condition()
         self._inflight: Deque[_InflightEntry] = deque()  # reservation order
         self._submitted: List[StreamHandle] = []
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Pipeline fault counters: micro-batch ``retries``, ``timeouts``
+        observed, and batches that still ``failures``-reported after
+        retries."""
+        with self._cv:
+            return dict(self._stats)
 
     # -- pipeline plumbing --------------------------------------------------
 
@@ -437,23 +503,89 @@ class StreamingExecutor:
                 self._cv.wait()
             self._inflight.remove(entry)
             self._cv.notify_all()  # a window slot is free
-        try:
-            part = self.executor.finalize(entry.pending)
-        except BaseException as exc:
-            # The entry is already popped; without this the handle would
-            # never complete and every later result()/drain() would wait
-            # forever. Fail the handle — the error surfaces exactly once,
-            # at that batch's collector (its result(), or drain) — and
-            # count the retirement as progress for whoever drove it, whose
-            # own batch may be perfectly healthy.
-            with self._cv:
-                entry.handle._fail(exc)
-                self._cv.notify_all()
-            return True
+        injected_sites: List[str] = []
+        while True:
+            try:
+                faults.maybe_inject(
+                    "dispatch_timeout",
+                    f"injected micro-batch timeout (part {entry.idx})",
+                )
+                part = self._finalize_timed(entry.pending)
+            except Exception as exc:
+                if isinstance(exc, StreamTimeout):
+                    with self._cv:
+                        self._stats["timeouts"] += 1
+                if isinstance(exc, faults.FaultInjected):
+                    injected_sites.append(exc.site)
+                restaged = False
+                while entry.attempts < self.retries and entry.X is not None:
+                    # Bounded retry: re-stage this micro-batch from source
+                    # (never donated — the source batch outlives retries)
+                    # and re-dispatch. A transient device hiccup or an
+                    # injected timeout heals here without failing the batch.
+                    entry.attempts += 1
+                    with self._cv:
+                        self._stats["retries"] += 1
+                        entry.handle.retries += 1
+                    try:
+                        staged = self.executor.stage(
+                            entry.X[:, entry.sl], donate=False
+                        )
+                        entry.pending = self.executor.dispatch(staged)
+                        restaged = True
+                        break
+                    except Exception as exc2:
+                        exc = exc2  # restage itself failed; spend a retry
+                if restaged:
+                    continue  # finalize the freshly dispatched work
+                # Out of retries. The entry is already popped; without this
+                # the handle would never complete and every later
+                # result()/drain() would wait forever. Fail the handle —
+                # the error surfaces exactly once, at that batch's
+                # collector (its result(), or drain().failures) — and
+                # count the retirement as progress for whoever drove it,
+                # whose own batch may be perfectly healthy.
+                with self._cv:
+                    self._stats["failures"] += 1
+                    entry.handle._fail(exc)
+                    self._cv.notify_all()
+                return True
+            break
+        # Retrying past injected faults counts as recovery.
+        for site in injected_sites:
+            faults.note_recovered(site)
         with self._cv:
             entry.handle._deliver(entry.idx, part)
             self._cv.notify_all()
         return True
+
+    def _finalize_timed(self, pending):
+        """`finalize` with the pipeline's per-micro-batch deadline applied.
+
+        The device sync runs on a helper thread only when a timeout is set;
+        exceeding it raises `StreamTimeout` (the abandoned sync thread is a
+        daemon — it parks on the device handle and dies with the process,
+        which is the best a host can do about a truly hung accelerator)."""
+        if self.timeout is None:
+            return self.executor.finalize(pending)
+        box: Dict[str, Any] = {}
+
+        def _run() -> None:
+            try:
+                box["value"] = self.executor.finalize(pending)
+            except BaseException as exc:  # surfaces on the caller thread
+                box["error"] = exc
+
+        t = threading.Thread(target=_run, daemon=True)
+        t.start()
+        t.join(self.timeout)
+        if t.is_alive():
+            raise StreamTimeout(
+                f"micro-batch finalize exceeded timeout={self.timeout}s"
+            )
+        if "error" in box:
+            raise box["error"]
+        return box["value"]
 
     def _pump(self, handle: StreamHandle, X, slices) -> None:
         """Stage + dispatch every micro-batch of `X`, retiring the oldest
@@ -480,7 +612,7 @@ class StreamingExecutor:
 
     def _pump_inner(self, handle: StreamHandle, X, slices) -> None:
         for idx, sl in enumerate(slices):
-            entry = _InflightEntry(handle, idx)
+            entry = _InflightEntry(handle, idx, X, sl)
             while True:  # reserve a window slot
                 with self._cv:
                     if len(self._inflight) < self.depth:
@@ -542,6 +674,14 @@ class StreamingExecutor:
             raise ValueError(
                 f"submit expects X of shape ({self.n_cols}, k), got {X.shape}"
             )
+        if self.validate and X.size and not (
+            np.all(np.isfinite(X)) if isinstance(X, np.ndarray)
+            else bool(jnp.all(jnp.isfinite(X)))
+        ):
+            raise ValueError(
+                "submit rejected RHS batch: non-finite values (NaN/Inf) in X "
+                "(validate=True guards the pipeline against poisoned inputs)"
+            )
         k = int(X.shape[1])
         slices = microbatch_slices(k, self.microbatch) if k else []
         handle = StreamHandle(self, k, len(slices), X.dtype)
@@ -550,17 +690,22 @@ class StreamingExecutor:
         self._pump(handle, X, slices)
         return handle
 
-    def drain(self) -> List[Any]:
+    def drain(self) -> DrainResult:
         """Retire all in-flight work; return every not-yet-collected batch's
-        result in submission order (empty list when idle). A batch whose
-        `result()` was (or is being) collected by its own thread is excluded
-        — drain never re-delivers a claimed batch. (`result()` itself stays
-        idempotent for the handle's owner, like a future: re-reading your
-        own handle is allowed even after a drain collected it.) If a batch
-        failed, its
-        error is raised and only *that* batch is consumed: the healthy
-        batches stay collectable, so a caller that catches the error and
-        drains again recovers every good result."""
+        result in submission order (an empty `DrainResult` when idle). A
+        batch whose `result()` was (or is being) collected by its own thread
+        is excluded — drain never re-delivers a claimed batch. (`result()`
+        itself stays idempotent for the handle's owner, like a future:
+        re-reading your own handle is allowed even after a drain collected
+        it.)
+
+        Failures are *reported*, not raised: a batch that still failed after
+        the pipeline's bounded retries appears in the returned
+        `DrainResult.failures` (index in submission order, k, error, retries
+        spent) while every healthy batch's result is delivered normally — a
+        single poisoned submission can no longer wedge or mask the rest of
+        the pipeline. Callers that want the old throwing behavior check
+        ``drain().failures`` themselves."""
         while True:
             if self._retire_oldest():
                 continue
@@ -571,19 +716,18 @@ class StreamingExecutor:
                     self._cv.wait()  # parts mid-finalize on another thread
                     continue
                 pending = [h for h in self._submitted if not h._collected]
-                failed = next((h for h in pending if h.failed), None)
-                if failed is not None:
-                    # consume only the failed batch; healthy ones remain
-                    # in _submitted for the retry drain()
-                    failed._collected = True
-                    self._submitted.remove(failed)
-                else:
-                    for h in pending:
-                        h._collected = True
-                    self._submitted = []
-            if failed is not None:
-                return failed._assemble()  # raises the stored error
-            return [h._assemble() for h in pending]
+                for h in pending:
+                    h._collected = True
+                self._submitted = []
+            return DrainResult(
+                (h._assemble() for h in pending if not h.failed),
+                failures=[
+                    BatchFailure(
+                        index=i, k=h.k, error=h._error, retries=h.retries
+                    )
+                    for i, h in enumerate(pending) if h.failed
+                ],
+            )
 
     def matvec(self, x):
         """Single-RHS convenience: streams a (n_cols, 1) batch."""

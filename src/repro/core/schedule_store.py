@@ -28,22 +28,36 @@ carries a JSON header with:
 Writes are atomic (temp file + ``os.replace``) so a crashed process never
 leaves a half-written schedule for the next one to trip over.
 
+The store is **self-healing**: transient IO errors (ENOSPC / EIO, real or
+injected via `core.faults`) get bounded retry with exponential backoff, a
+file that fails validation is quarantined (renamed ``*.bad``) by the caller
+via `quarantine` so the next lookup replans instead of re-tripping, and an
+interrupted atomic write always cleans up its temp file and descriptor.
+`store_io_stats()` surfaces the ``quarantined`` / ``retries`` counters that
+`engine.schedule_cache_stats()` folds into its report.
+
 The cache directory defaults to the ``REPRO_SCHEDULE_CACHE`` environment
 variable (unset = persistence off); `SpMVEngine`, ``launch/serve.py
 --schedule-cache`` and the benchmarks thread explicit directories through.
 """
 from __future__ import annotations
 
+import errno
 import hashlib
 import json
 import os
 import tempfile
-from typing import Optional
+import threading
+import time
+from typing import Callable, Dict, Optional, TypeVar
 
 import jax.numpy as jnp
 import numpy as np
 
+from . import faults
 from .coalescer import BlockSchedule
+
+_T = TypeVar("_T")
 
 CACHE_DIR_ENV = "REPRO_SCHEDULE_CACHE"
 # v2: partial-window tail padding no longer mints a spurious block-0 warp, so
@@ -59,6 +73,97 @@ class ScheduleCacheMismatch(ValueError):
     """A persisted schedule exists but cannot be used: wrong store version,
     wrong stream/matrix digest, inconsistent geometry, or unreadable file.
     Callers treat this as a cache miss and replan."""
+
+
+# --- IO-health counters (shared by the schedule and tune stores) -----------
+
+IO_RETRIES = 3
+IO_BACKOFF_BASE_S = 0.01
+
+_io_stats: Dict[str, int] = {"quarantined": 0, "retries": 0}
+_io_stats_lock = threading.Lock()
+
+
+def _bump_io(counter: str, by: int = 1) -> None:
+    with _io_stats_lock:
+        _io_stats[counter] += by
+
+
+def store_io_stats() -> Dict[str, int]:
+    """Snapshot of persistence-layer health counters (all stores)."""
+    with _io_stats_lock:
+        return dict(_io_stats)
+
+
+def clear_store_io_stats() -> None:
+    with _io_stats_lock:
+        for k in _io_stats:
+            _io_stats[k] = 0
+
+
+_TRANSIENT_ERRNOS = frozenset(
+    {errno.ENOSPC, errno.EIO, errno.EAGAIN, errno.EINTR, errno.EBUSY}
+)
+
+
+def transient_io(exc: BaseException) -> bool:
+    """True for IO errors worth retrying (disk momentarily full / flaky)."""
+    return isinstance(exc, OSError) and exc.errno in _TRANSIENT_ERRNOS
+
+
+def retry_io(
+    fn: Callable[[], _T],
+    *,
+    what: str,
+    retries: int = IO_RETRIES,
+    base_delay: float = IO_BACKOFF_BASE_S,
+    on_retry: Optional[Callable[[], None]] = None,
+) -> _T:
+    """Run `fn`, retrying transient IO errors with exponential backoff.
+
+    Non-transient exceptions propagate immediately; after `retries` failed
+    retries the last transient error propagates too.  Each retry bumps the
+    module ``retries`` counter (plus the caller's `on_retry` hook, e.g. the
+    tune store's local tally).
+    """
+    attempt = 0
+    injected: Dict[str, int] = {}
+    while True:
+        try:
+            result = fn()
+        except OSError as e:
+            if not transient_io(e) or attempt >= retries:
+                raise
+            if isinstance(e, faults.FaultInjected):
+                injected[e.site] = injected.get(e.site, 0) + 1
+            _bump_io("retries")
+            if on_retry is not None:
+                on_retry()
+            time.sleep(base_delay * (2 ** attempt))
+            attempt += 1
+            continue
+        # Retrying past an injected transient error counts as a recovery.
+        for site, n in injected.items():
+            faults.note_recovered(site, n)
+        return result
+
+
+def quarantine(path: str, *, on_quarantine: Optional[Callable[[], None]] = None) -> Optional[str]:
+    """Rename a failed-validation cache file to ``<path>.bad`` so the next
+    lookup rebuilds instead of re-reading the same broken bytes.
+
+    Returns the quarantine path, or None if the file vanished underneath us
+    (another process may have quarantined it first — that is fine).
+    """
+    bad = path + ".bad"
+    try:
+        os.replace(path, bad)
+    except OSError:
+        return None
+    _bump_io("quarantined")
+    if on_quarantine is not None:
+        on_quarantine()
+    return bad
 
 
 def resolve_cache_dir(cache_dir: Optional[str]) -> Optional[str]:
@@ -119,16 +224,51 @@ def save_schedule(
     }
     dirname = os.path.dirname(path) or "."
     os.makedirs(dirname, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".npz.tmp")
+
+    def _attempt() -> None:
+        atomic_write_bytes(
+            path,
+            lambda f: np.savez_compressed(f, header=json.dumps(header), **arrays),
+            suffix=".npz.tmp",
+        )
+
+    retry_io(_attempt, what=f"save schedule {path}")
+    return path
+
+
+def atomic_write_bytes(
+    path: str, write: Callable[[object], None], *, suffix: str = ".tmp"
+) -> None:
+    """One atomic write attempt: temp file + ``os.replace``.
+
+    Guarantees that neither the temp file nor its descriptor outlives a
+    failure anywhere on the serialize/rename path (`write` raising, `fdopen`
+    itself raising, or `os.replace` failing) — an interrupted write must
+    never strand ``*.tmp`` files in the cache dir.  Raises whatever the
+    failing step raised; `retry_io` decides whether to try again.
+    """
+    dirname = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=suffix)
     try:
-        with os.fdopen(fd, "wb") as f:
-            np.savez_compressed(f, header=json.dumps(header), **arrays)
+        try:
+            f = os.fdopen(fd, "wb")
+        except BaseException:
+            os.close(fd)
+            raise
+        with f:
+            write(f)
+            # Simulated ENOSPC/EIO from the chaos harness lands here, after
+            # bytes hit the temp file — the torn-write cleanup path below is
+            # exactly what a real mid-write disk error exercises.
+            faults.maybe_inject("store_write", f"simulated disk error writing {path}")
         os.replace(tmp, path)
     except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+        try:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        except OSError:
+            pass
         raise
-    return path
 
 
 def load_schedule(
@@ -145,11 +285,23 @@ def load_schedule(
     matrix-digest check only applies when both sides carry a digest (a
     schedule saved without matrix context is valid for any matrix whose
     stream matches — stream identity is what schedule correctness needs).
+
+    Transient IO errors (EIO and friends) are retried with backoff before
+    being treated as an unreadable file; the chaos harness's ``store_read``
+    site corrupts the bytes on disk right here, so injected corruption flows
+    through the very same rejection path a real torn file would.
     """
-    try:
+    faults.corrupt_file(path, "store_read")
+
+    def _read():
         with np.load(path, allow_pickle=False) as z:
-            header = json.loads(z["header"].item())
-            arrays = {name: z[name] for name in _ARRAY_FIELDS}
+            return (
+                json.loads(z["header"].item()),
+                {name: z[name] for name in _ARRAY_FIELDS},
+            )
+
+    try:
+        header, arrays = retry_io(_read, what=f"load schedule {path}")
     except Exception as e:
         raise ScheduleCacheMismatch(f"unreadable schedule file {path}: {e}")
 

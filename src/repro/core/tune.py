@@ -37,14 +37,13 @@ import hashlib
 import itertools
 import json
 import os
-import tempfile
 import threading
 import time
 from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
-from . import schedule_store
+from . import faults, schedule_store
 from .coalescer import META_BYTES_PACKED, META_BYTES_UNPACKED
 from .engine import SpMVEngine, VALUE_DTYPES, _sell_content_digest, \
     get_engine, resolve_backend, resolve_value_dtype, value_bytes_per_elem
@@ -102,6 +101,11 @@ _lock = threading.Lock()
 _stats = {
     "searched": 0, "trials": 0, "memory_hits": 0, "disk_hits": 0,
     "disk_rejects": 0, "disk_saves": 0,
+    # Self-healing counters, mirroring the schedule store: rejected winner
+    # files are quarantined (`*.bad`) and re-searched; transient IO errors on
+    # the atomic write are retried with backoff; a write that stays broken
+    # degrades to memory-only instead of failing the search.
+    "quarantined": 0, "retries": 0, "save_errors": 0,
 }
 
 
@@ -211,15 +215,18 @@ def _save(path: str, plan: TunedPlan, *, matrix_digest: str, key: str) -> None:
     }
     dirname = os.path.dirname(path) or "."
     os.makedirs(dirname, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".json.tmp")
+    blob = json.dumps(payload, indent=2).encode()
     try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f, indent=2)
-        os.replace(tmp, path)
-    except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-        raise
+        schedule_store.retry_io(
+            lambda: schedule_store.atomic_write_bytes(
+                path, lambda f: f.write(blob), suffix=".json.tmp"
+            ),
+            what=f"save tuned plan {path}",
+            on_retry=lambda: _bump("retries"),
+        )
+    except OSError:
+        _bump("save_errors")
+        return
     _bump("disk_saves")
 
 
@@ -232,10 +239,22 @@ def _load(
     digest, key), the winner body itself is validated against the search it
     claims to answer: every knob must come from the keyed space, and
     k/backend/mode/cost must be the question's own — a hand-edited winner
-    must not smuggle knobs the search never produced into `get_engine`."""
-    try:
+    must not smuggle knobs the search never produced into `get_engine`.
+
+    Self-healing: transient IO errors retry with backoff, and a rejected
+    file is quarantined (renamed ``*.bad``) so the re-search that follows
+    can persist a fresh winner instead of fighting the broken bytes."""
+    faults.corrupt_file(path, "store_read")
+
+    def _read():
         with open(path) as f:
-            payload = json.load(f)
+            return json.load(f)
+
+    try:
+        payload = schedule_store.retry_io(
+            _read, what=f"load tuned plan {path}",
+            on_retry=lambda: _bump("retries"),
+        )
         if (
             payload.get("version") != TUNE_VERSION
             or payload.get("matrix_digest") != matrix_digest
@@ -273,6 +292,12 @@ def _load(
             raise ValueError("winner body mismatch")
     except Exception:
         _bump("disk_rejects")
+        schedule_store.quarantine(
+            path, on_quarantine=lambda: _bump("quarantined")
+        )
+        # The caller re-searches and re-saves on a None return, which is the
+        # recovery for an injected read corruption.
+        faults.note_recovered("store_read")
         return None
     _bump("disk_hits")
     return plan

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core import faults
 from repro.core import matrices as _matgen
 from repro.models import build_model, make_input_batch
 from repro.models.transformer import Runtime
@@ -199,6 +200,38 @@ def serve_paged(args) -> None:
             f"paged-serve: plan-reuse violation — {builds_warm} schedule "
             f"build(s) after the first decode step (expected 0)"
         )
+    if faults.active_plan() is not None and args.schedule_cache:
+        # Chaos drill: paged decode plans in memory only, so round-trip one
+        # layer's gather plan through the self-healing store to give the
+        # store fault sites something to hit (store_write retries inside
+        # persist; store_read corruption heals via quarantine + re-persist).
+        from repro.core import schedule_store
+        from repro.models.paged_kv import _kv_engine
+
+        eng = _kv_engine(caches[0], backend=backend)
+        eng.schedule  # force the plan before persisting
+        path = eng.persist_schedule(args.schedule_cache)
+        healed = "clean"
+        try:
+            schedule_store.load_schedule(
+                path, expect_stream_digest=eng.digest
+            )
+        except schedule_store.ScheduleCacheMismatch:
+            schedule_store.quarantine(path)
+            eng.persist_schedule(args.schedule_cache)
+            faults.note_recovered("store_read")
+            healed = "quarantined + re-persisted"
+            with faults.suspended():  # oracle read: verify the healed file
+                try:
+                    schedule_store.load_schedule(
+                        path, expect_stream_digest=eng.digest
+                    )
+                except Exception as exc:
+                    raise SystemExit(
+                        f"paged-serve: gather plan unreadable after "
+                        f"quarantine + re-persist: {exc!r}"
+                    )
+        print(f"  chaos store drill: gather plan round-trip {healed}")
 
 
 _SPMV_MATRICES = {
@@ -222,6 +255,7 @@ def serve_solve(args) -> None:
         csr = make_spd(csr)  # CG/Jacobi need SPD / diag-dominant input
     kw = dict(
         backend=args.backend, window=args.window, block_rows=args.block_rows,
+        cache_dir=args.schedule_cache,
     )
     solver = {
         "cg": lambda m, b: solvers.cg(m, b, tol=1e-6, **kw),
@@ -407,6 +441,9 @@ def serve_spmv(args) -> None:
             engine,
             microbatch=stream_cfg["microbatch"],
             depth=stream_cfg["depth"],
+            # Under chaos, budget micro-batch retries so injected dispatch
+            # timeouts heal inside the pipeline instead of failing batches.
+            retries=2 if faults.active_plan() is not None else 0,
         )
         # The serving loop feeds every request through one pipeline, so the
         # overlap term sees the whole stream of columns, not a single batch.
@@ -434,6 +471,23 @@ def serve_spmv(args) -> None:
     # compile/warm both paths outside the timed loops (block_until_ready is a
     # no-op on the sharded engine's host-gathered results)
     y_sync = np.asarray(jax.block_until_ready(engine.matmat(batches[0])))
+    if faults.active_plan() is not None:
+        # Chaos parity: the same batch computed with injection suspended is
+        # the fault-free oracle; recovery must be bit-identical on the
+        # reference backend and within float tolerance on pallas.
+        with faults.suspended():
+            y_ref = np.asarray(jax.block_until_ready(engine.matmat(batches[0])))
+        chaos_err = float(np.abs(y_sync - y_ref).max()) if y_ref.size else 0.0
+        chaos_tol = 0.0 if rep["backend_resolved"] == "reference" else 1e-5
+        print(
+            f"  chaos parity vs fault-free matmat: "
+            f"max_abs_err={chaos_err:.2e} (tol={chaos_tol:g})"
+        )
+        if not chaos_err <= chaos_tol:
+            raise SystemExit(
+                f"--chaos: recovered result diverged from fault-free oracle "
+                f"(max_abs_err={chaos_err:.2e} > tol={chaos_tol:g})"
+            )
     if streamer is not None:
         err = float(np.abs(streamer.matmat(batches[0]) - y_sync).max())
         print(f"  stream parity vs sync matmat: max_abs_err={err:.2e}")
@@ -451,8 +505,15 @@ def serve_spmv(args) -> None:
         t0 = time.time()
         for B in batches:
             streamer.submit(B)  # bounded in-flight queue applies backpressure
-        jax.block_until_ready(streamer.drain())
+        outs = streamer.drain()
+        jax.block_until_ready(list(outs))
         dt_stream = time.time() - t0
+        if outs.failures:
+            first = outs.failures[0]
+            raise SystemExit(
+                f"stream: {len(outs.failures)} batch(es) failed after "
+                f"{first.retries} retry(ies): {first.error!r}"
+            )
         gflops_s = 2.0 * csr.nnz * spmvs / max(dt_stream, 1e-12) / 1e9
         print(
             f"  streamed the same {args.requests} batches in {dt_stream:.3f}s "
@@ -593,18 +654,62 @@ def main() -> None:
         help="exit nonzero unless this process planned zero schedules from "
         "scratch (requires a warm --schedule-cache)",
     )
+    ap.add_argument(
+        "--chaos", default=None, metavar="SPEC",
+        help="run the selected serve mode under deterministic fault "
+        "injection (core.faults spec, e.g. "
+        "'store_read:rate=1,count=1;shard_fail:after=1,count=1'); exits "
+        "nonzero unless at least one fault was injected, every injected "
+        "fault recovered, and parity with the fault-free oracle held",
+    )
     args = ap.parse_args()
 
     if args.solve and not args.spmv:
         ap.error("--solve requires --spmv to pick the matrix family")
+    if not args.spmv and not args.arch:
+        ap.error("--arch is required unless --spmv is given")
+
+    if args.chaos is not None:
+        try:
+            plan = faults.FaultPlan(args.chaos)
+        except ValueError as exc:
+            ap.error(str(exc))
+        with plan:
+            _run_mode(args)
+        rep = plan.report()
+        print(
+            f"chaos: spec={args.chaos!r} injected={rep['injected']} "
+            f"recovered={rep['recovered']} unrecovered={rep['unrecovered']}"
+        )
+        for site, s in sorted(rep["sites"].items()):
+            print(
+                f"  {site}: events={s['events']} injected={s['injected']} "
+                f"recovered={s['recovered']}"
+            )
+        if rep["injected"] == 0:
+            raise SystemExit(
+                "--chaos: spec injected no faults — nothing was exercised "
+                "(check the site names / after= thresholds against this mode)"
+            )
+        if rep["unrecovered"]:
+            raise SystemExit(
+                f"--chaos: {rep['unrecovered']} injected fault(s) were not "
+                f"recovered"
+            )
+        print("chaos: all injected faults recovered")
+    else:
+        _run_mode(args)
+
+
+def _run_mode(args) -> None:
+    """Dispatch to the serve mode the flags select (shared by the normal and
+    --chaos paths so fault injection wraps exactly one mode run)."""
     if args.spmv:
         if args.solve:
             serve_solve(args)
         else:
             serve_spmv(args)
         return
-    if not args.arch:
-        ap.error("--arch is required unless --spmv is given")
     if args.paged:
         serve_paged(args)
         return

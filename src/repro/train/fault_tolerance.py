@@ -73,7 +73,13 @@ class StragglerPolicy:
             self._misses = 0
             return "ok"
         self._misses += 1
-        return "reassign" if self._misses >= self.patience else "warn"
+        if self._misses >= self.patience:
+            # Re-arm after signalling: the shard was just reassigned, so the
+            # next reassignment again requires `patience` consecutive misses
+            # (otherwise one slow worker triggers a reassign storm).
+            self._misses = 0
+            return "reassign"
+        return "warn"
 
 
 def run_with_recovery(
@@ -93,6 +99,10 @@ def run_with_recovery(
     the loop restores the newest complete checkpoint and resumes. Restore maps
     arrays onto `shardings` — pass shardings built from the CURRENT mesh to
     get elastic re-sharding on a changed device count."""
+    if ckpt_every < 1:
+        # Fail fast: `step % ckpt_every` would otherwise ZeroDivisionError
+        # only once training reaches the first step — long after launch.
+        raise ValueError(f"ckpt_every must be >= 1, got {ckpt_every}")
     ckpt = AsyncCheckpointer(ckpt_dir)
     restarts = 0
     state = init_state()

@@ -1,0 +1,234 @@
+"""train.fault_tolerance unit coverage: HeartbeatMonitor liveness math,
+StragglerPolicy state machine, and the run_with_recovery supervisor loop
+(crash/restore cadence, restore-none restart, restart budget, warm resume).
+
+Complements tests/test_checkpoint_ft.py (checkpoint mechanics + one happy
+recovery path) with the failure-policy edges: newly-dead-once reporting,
+worker revival, deadline boundaries, reassign re-arming, and supervisor
+behavior when recovery itself has nothing to restore.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import list_checkpoints, save_checkpoint
+from repro.train.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerPolicy,
+    run_with_recovery,
+)
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# HeartbeatMonitor
+# --------------------------------------------------------------------------
+
+
+def test_dead_workers_reported_once_until_revival():
+    clk = Clock()
+    mon = HeartbeatMonitor(timeout_s=5.0, now=clk)
+    mon.beat("w0", 1)
+    mon.beat("w1", 1)
+    clk.t = 6.0
+    assert sorted(mon.dead_workers()) == ["w0", "w1"]
+    # newly-dead-once: a second sweep must not re-report the same corpses
+    assert mon.dead_workers() == []
+    # a heartbeat revives the worker...
+    mon.beat("w0", 2)
+    assert mon.dead_workers() == []
+    # ...and a revived worker that goes silent again is re-reported
+    clk.t = 12.0
+    assert mon.dead_workers() == ["w0"]
+
+
+def test_dead_worker_boundary_is_strictly_after_timeout():
+    clk = Clock()
+    mon = HeartbeatMonitor(timeout_s=5.0, now=clk)
+    mon.beat("w0", 1)
+    clk.t = 5.0  # age == timeout: still alive
+    assert mon.dead_workers() == []
+    clk.t = 5.0001
+    assert mon.dead_workers() == ["w0"]
+
+
+def test_stragglers_by_step_lag_excluding_dead():
+    clk = Clock()
+    mon = HeartbeatMonitor(timeout_s=5.0, now=clk)
+    mon.beat("fast", 20)
+    mon.beat("slow", 10)
+    mon.beat("corpse", 2)
+    assert mon.stragglers(fleet_step=20, max_lag=5) == ["slow", "corpse"]
+    # lag == max_lag is tolerated (strictly-greater cutoff)
+    assert mon.stragglers(fleet_step=15, max_lag=5) == ["corpse"]
+    clk.t = 6.0
+    mon.beat("fast", 21)
+    mon.beat("slow", 11)
+    assert mon.dead_workers() == ["corpse"]
+    # dead workers are the dead_workers() channel's problem, not lag's
+    assert mon.stragglers(fleet_step=21, max_lag=5) == ["slow"]
+
+
+# --------------------------------------------------------------------------
+# StragglerPolicy
+# --------------------------------------------------------------------------
+
+
+def test_policy_escalates_warn_then_reassign():
+    p = StragglerPolicy(step_deadline_s=1.0, patience=3)
+    assert [p.observe(2.0), p.observe(2.0), p.observe(2.0)] == [
+        "warn", "warn", "reassign"
+    ]
+
+
+def test_policy_resets_on_meeting_deadline():
+    p = StragglerPolicy(step_deadline_s=1.0, patience=2)
+    assert p.observe(2.0) == "warn"
+    assert p.observe(0.5) == "ok"  # streak broken
+    assert p.observe(2.0) == "warn"  # counting starts over
+    assert p.observe(2.0) == "reassign"
+
+
+def test_policy_rearms_after_reassign():
+    # After a reassign the shard moved; the policy must demand a fresh run of
+    # `patience` misses, not fire "reassign" on every subsequent slow step.
+    p = StragglerPolicy(step_deadline_s=1.0, patience=2)
+    assert p.observe(2.0) == "warn"
+    assert p.observe(2.0) == "reassign"
+    assert p.observe(2.0) == "warn"
+    assert p.observe(2.0) == "reassign"
+
+
+def test_policy_deadline_boundary_is_inclusive():
+    p = StragglerPolicy(step_deadline_s=1.0, patience=1)
+    assert p.observe(1.0) == "ok"  # exactly on deadline: met
+    assert p.observe(1.0001) == "reassign"  # patience=1: first miss fires
+
+
+# --------------------------------------------------------------------------
+# run_with_recovery
+# --------------------------------------------------------------------------
+
+
+def _counting_step(fail_at=(), failed=None):
+    """step_fn recording per-step effects; raises once per step in fail_at."""
+    failed = set() if failed is None else failed
+
+    def step_fn(state, step):
+        if step in fail_at and step not in failed:
+            failed.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+        return {
+            "x": state["x"] + 1,
+            "hist": state["hist"].at[step].add(1),
+        }
+
+    return step_fn
+
+
+def _init():
+    return {"x": jnp.zeros(()), "hist": jnp.zeros(32)}
+
+
+def test_recovery_replays_only_since_last_checkpoint(tmp_path):
+    final = run_with_recovery(
+        init_state=_init,
+        train_one_step=_counting_step(fail_at=(5, 9)),
+        total_steps=12,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=1,  # checkpoint every step: restore replays nothing extra
+        max_restarts=2,
+    )
+    # every step's effect present exactly once despite two crashes
+    np.testing.assert_array_equal(np.asarray(final["hist"][:12]), np.ones(12))
+    assert float(final["x"]) == 12.0
+
+
+def test_failure_before_any_checkpoint_restarts_from_init(tmp_path):
+    inits = {"n": 0}
+
+    def init_state():
+        inits["n"] += 1
+        return _init()
+
+    final = run_with_recovery(
+        init_state=init_state,
+        train_one_step=_counting_step(fail_at=(0,)),
+        total_steps=4,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=10,  # nothing saved before the step-0 crash
+    )
+    assert inits["n"] == 2  # cold start + restore-none restart
+    np.testing.assert_array_equal(np.asarray(final["hist"][:4]), np.ones(4))
+
+
+def test_restart_budget_exhaustion_reraises(tmp_path):
+    def always_dies(state, step):
+        raise RuntimeError("hard failure")
+
+    with pytest.raises(RuntimeError, match="hard failure"):
+        run_with_recovery(
+            init_state=_init,
+            train_one_step=always_dies,
+            total_steps=4,
+            ckpt_dir=str(tmp_path),
+            max_restarts=2,
+        )
+
+
+def test_resume_from_warm_checkpoint_dir(tmp_path):
+    # a previous incarnation saved step 5; a new supervisor must resume at 6
+    state5 = {"x": jnp.asarray(6.0), "hist": jnp.zeros(32)}
+    save_checkpoint(tmp_path, 5, state5)
+    seen = []
+    final = run_with_recovery(
+        init_state=_init,
+        train_one_step=_counting_step(),
+        total_steps=10,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=2,
+        on_step=lambda step, state: seen.append(step),
+    )
+    assert seen == [6, 7, 8, 9]
+    assert float(final["x"]) == 10.0
+    # final-step checkpoint written so a successor resumes cleanly
+    assert [s for s, _ in list_checkpoints(tmp_path)][-1] == 9
+
+
+def test_completed_run_resumes_as_noop(tmp_path):
+    run_with_recovery(
+        init_state=_init,
+        train_one_step=_counting_step(),
+        total_steps=6,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=2,
+    )
+    steps = []
+    final = run_with_recovery(  # same dir, same target: nothing left to do
+        init_state=_init,
+        train_one_step=_counting_step(),
+        total_steps=6,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=2,
+        on_step=lambda step, state: steps.append(step),
+    )
+    assert steps == []
+    assert float(final["x"]) == 6.0
+
+
+def test_invalid_ckpt_every_fails_fast(tmp_path):
+    with pytest.raises(ValueError, match="ckpt_every"):
+        run_with_recovery(
+            init_state=_init,
+            train_one_step=_counting_step(),
+            total_steps=4,
+            ckpt_dir=str(tmp_path),
+            ckpt_every=0,
+        )

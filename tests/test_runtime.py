@@ -13,6 +13,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 from pathlib import Path
 
 import jax
@@ -33,7 +34,7 @@ from repro.core import (
 )
 from repro.core.formats import dense_to_csr
 from repro.core.matrices import banded, powerlaw
-from repro.core.runtime import Executor, pad_width
+from repro.core.runtime import Executor, StreamTimeout, pad_width
 
 REPO = Path(__file__).resolve().parent.parent
 RNG = np.random.default_rng(77)
@@ -285,10 +286,11 @@ def test_pipeline_failure_fails_the_handle_instead_of_wedging():
     )
 
 
-def test_drain_raises_failed_batch_but_keeps_healthy_results():
-    """One bad request must not destroy the others: drain() raises the
-    failed batch's error and consumes only that batch; a retry drain()
-    returns every healthy result."""
+def test_drain_reports_failed_batch_and_keeps_healthy_results():
+    """One bad request must not destroy the others: drain() delivers every
+    healthy result and *reports* the failed batch in `.failures`
+    (submission-order index, error, retries spent) instead of raising —
+    structured failure reporting, so a serving loop decides per batch."""
     sell = _sell_case(48, 64, 0.15, 8, seed=31)
     eng = SpMVEngine(sell, backend="reference")
     streamer = StreamingExecutor(eng, microbatch=8, depth=2)
@@ -307,17 +309,106 @@ def test_drain_raises_failed_batch_but_keeps_healthy_results():
 
     eng.finalize = flaky
     try:
-        streamer.submit(bad)
+        hb = streamer.submit(bad)
         streamer.submit(good)
-        with pytest.raises(RuntimeError, match="transient"):
-            streamer.drain()
-        outs = streamer.drain()  # healthy batch survived the failure
+        outs = streamer.drain()
     finally:
         eng.finalize = real_finalize
-    assert len(outs) == 1
+    assert len(outs) == 1  # the healthy batch's result, delivered normally
     np.testing.assert_array_equal(
         np.asarray(outs[0]), np.asarray(eng.matmat(good))
     )
+    assert not outs.ok and len(outs.failures) == 1
+    failure = outs.failures[0]
+    assert failure.index == 0 and failure.k == 4 and failure.retries == 0
+    assert isinstance(failure.error, RuntimeError)
+    assert "transient device error" in str(failure.error)
+    assert hb.failed and hb.error is failure.error
+    assert streamer.drain() == []  # failures are consumed, not re-reported
+    assert streamer.stats["failures"] == 1
+
+
+def test_microbatch_retry_recovers_transient_failures():
+    """With retries budgeted, a transient finalize failure is re-staged from
+    source and heals: no failure reported, result bit-identical."""
+    sell = _sell_case(48, 64, 0.15, 8, seed=33)
+    eng = SpMVEngine(sell, backend="reference")
+    streamer = StreamingExecutor(eng, microbatch=4, depth=2, retries=2)
+    rng = np.random.default_rng(34)
+    X = rng.standard_normal((sell.n_cols, 10)).astype(np.float32)
+
+    real_finalize = eng.finalize
+    calls = {"n": 0}
+
+    def flaky(pending):
+        calls["n"] += 1
+        if calls["n"] in (2, 3):  # two transient faults on distinct parts
+            raise RuntimeError("transient device error")
+        return real_finalize(pending)
+
+    eng.finalize = flaky
+    try:
+        streamer.submit(X)
+        outs = streamer.drain()
+    finally:
+        eng.finalize = real_finalize
+    assert outs.ok and len(outs) == 1
+    np.testing.assert_array_equal(
+        np.asarray(outs[0]), np.asarray(eng.matmat(X))
+    )
+    assert streamer.stats["retries"] == 2
+    assert streamer.stats["failures"] == 0
+
+
+def test_microbatch_timeout_is_reported_after_retries():
+    """A finalize that hangs past `timeout` fails its batch with
+    StreamTimeout after the retry budget, without wedging the pipeline."""
+    sell = _sell_case(32, 48, 0.2, 8, seed=35)
+    eng = SpMVEngine(sell, backend="reference")
+    rng = np.random.default_rng(36)
+    X = rng.standard_normal((sell.n_cols, 3)).astype(np.float32)
+
+    real_finalize = eng.finalize
+    eng.finalize = lambda pending: (time.sleep(0.6), real_finalize(pending))[1]
+    streamer = StreamingExecutor(eng, microbatch=4, timeout=0.05, retries=1)
+    try:
+        streamer.submit(X)
+        outs = streamer.drain()
+    finally:
+        eng.finalize = real_finalize
+    assert len(outs.failures) == 1
+    assert isinstance(outs.failures[0].error, StreamTimeout)
+    assert outs.failures[0].retries == 1
+    assert streamer.stats["timeouts"] >= 1
+    # pipeline still healthy afterwards
+    np.testing.assert_array_equal(
+        np.asarray(streamer.matmat(X)), np.asarray(eng.matmat(X))
+    )
+
+
+def test_validate_rejects_nonfinite_rhs():
+    """validate=True rejects NaN/Inf at staging time with a clear error;
+    the default pipeline streams them through untouched."""
+    sell = _sell_case(32, 48, 0.2, 8, seed=37)
+    eng = SpMVEngine(sell, backend="reference")
+    rng = np.random.default_rng(38)
+    X = rng.standard_normal((sell.n_cols, 4)).astype(np.float32)
+    X[5, 2] = np.nan
+
+    guarded = StreamingExecutor(eng, validate=True)
+    with pytest.raises(ValueError, match="non-finite"):
+        guarded.submit(X)
+    with pytest.raises(ValueError, match="non-finite"):
+        guarded.submit(jnp.asarray(X))  # device arrays are checked too
+    assert guarded.drain() == []  # the rejected batch never entered
+
+    X[5, 2] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        guarded.matmat(X)
+
+    unguarded = StreamingExecutor(eng)
+    out = np.asarray(unguarded.matmat(X))  # default: caller's poison
+    assert np.isinf(out).any() or np.isnan(out).any()
 
 
 def test_executor_identity_holds_for_empty_batch():

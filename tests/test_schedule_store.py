@@ -145,3 +145,115 @@ def test_save_creates_directories_and_is_atomic(tmp_path):
     assert all(
         not name.endswith(".tmp") for name in os.listdir(nested)
     )
+
+
+# --- self-healing IO: retry, quarantine, interrupted-write hygiene ---------
+
+
+def _open_fds():
+    return len(os.listdir("/proc/self/fd"))
+
+
+def test_fdopen_failure_closes_descriptor_and_tmp(tmp_path, monkeypatch):
+    """Pre-fix, `os.fdopen` raising stranded the mkstemp descriptor (and on
+    some paths the temp file): a planner retry loop would bleed fds."""
+    path = os.path.join(str(tmp_path), "s.npz")
+
+    def boom(fd, *a, **kw):
+        raise MemoryError("simulated fdopen failure")
+
+    monkeypatch.setattr(os, "fdopen", boom)
+    before = _open_fds()
+    for _ in range(8):
+        with pytest.raises(MemoryError):
+            schedule_store.atomic_write_bytes(path, lambda f: None)
+    assert _open_fds() == before  # no descriptor leak
+    assert os.listdir(str(tmp_path)) == []  # no temp file either
+
+
+def test_write_failure_unlinks_tmp_and_fd(tmp_path):
+    path = os.path.join(str(tmp_path), "s.npz")
+
+    def tearing_write(f):
+        f.write(b"half a schedule")
+        raise OSError(28, "No space left on device")
+
+    before = _open_fds()
+    with pytest.raises(OSError):
+        schedule_store.atomic_write_bytes(path, tearing_write)
+    assert os.listdir(str(tmp_path)) == []  # torn write fully cleaned up
+    assert _open_fds() == before
+
+
+def test_retry_io_retries_transient_errors_only():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError(28, "No space left on device")  # ENOSPC: transient
+        return "ok"
+
+    schedule_store.clear_store_io_stats()
+    assert schedule_store.retry_io(flaky, what="flaky") == "ok"
+    assert calls["n"] == 3
+    assert schedule_store.store_io_stats()["retries"] == 2
+
+    def denied():
+        calls["n"] += 1
+        raise PermissionError(13, "Permission denied")  # not transient
+
+    calls["n"] = 0
+    with pytest.raises(PermissionError):
+        schedule_store.retry_io(denied, what="denied")
+    assert calls["n"] == 1  # no retry burned on a permanent error
+
+
+def test_retry_io_gives_up_after_budget():
+    calls = {"n": 0}
+
+    def always_full():
+        calls["n"] += 1
+        raise OSError(28, "No space left on device")
+
+    with pytest.raises(OSError):
+        schedule_store.retry_io(
+            always_full, what="full", retries=2, base_delay=0.0
+        )
+    assert calls["n"] == 3  # initial attempt + 2 retries
+
+
+def test_save_schedule_survives_transient_write_errors(tmp_path):
+    """Pre-fix, one transient ENOSPC propagated out of `save_schedule` and
+    the planner lost its write-through; now bounded retry absorbs it."""
+    from repro.core.faults import FaultPlan
+
+    idx, sched = _schedule()
+    digest = stream_digest(idx)
+    path = os.path.join(str(tmp_path), "s.npz")
+    schedule_store.clear_store_io_stats()
+    with FaultPlan("store_write:rate=1,count=2"):
+        save_schedule(path, sched, stream_digest=digest)
+    loaded = load_schedule(path, expect_stream_digest=digest)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.tags), np.asarray(sched.tags)
+    )
+    assert schedule_store.store_io_stats()["retries"] == 2
+    # exhausted attempts never strand their temp files
+    assert all(
+        not n.endswith(".tmp") for n in os.listdir(str(tmp_path))
+    )
+
+
+def test_quarantine_renames_and_tolerates_races(tmp_path):
+    p = os.path.join(str(tmp_path), "sched-x.npz")
+    with open(p, "wb") as f:
+        f.write(b"broken")
+    schedule_store.clear_store_io_stats()
+    seen = []
+    bad = schedule_store.quarantine(p, on_quarantine=lambda: seen.append(1))
+    assert bad == p + ".bad" and os.path.exists(bad) and not os.path.exists(p)
+    assert seen == [1]
+    # a second quarantine (file already gone: lost the race) is a clean None
+    assert schedule_store.quarantine(p) is None
+    assert schedule_store.store_io_stats()["quarantined"] == 1

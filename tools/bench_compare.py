@@ -1,9 +1,10 @@
 """Bench-regression gate: diff fresh BENCH_*.json against committed baselines.
 
 CI's bench jobs (`benchmarks-smoke`, `matmat-smoke`, `solve-smoke`,
-`decode-smoke`) run `python -m benchmarks.run --smoke|--matmat|--solve|
---decode`, which writes BENCH_smoke.json / BENCH_matmat.json /
-BENCH_solve.json / BENCH_decode.json into the working directory. This script compares the higher-is-better metrics in those files
+`decode-smoke`, `chaos-smoke`) run `python -m benchmarks.run --smoke|
+--matmat|--solve|--decode|--chaos`, which writes BENCH_smoke.json /
+BENCH_matmat.json / BENCH_solve.json / BENCH_decode.json /
+BENCH_chaos.json into the working directory. This script compares the higher-is-better metrics in those files
 against the baselines committed under ``benchmarks/baselines/`` and exits
 nonzero when any metric drops more than its tolerance — the perf trajectory
 becomes a merge gate instead of an artifact someone has to remember to read.
@@ -40,6 +41,7 @@ BENCH_FILES = {
     "matmat": "BENCH_matmat.json",
     "solve": "BENCH_solve.json",
     "decode": "BENCH_decode.json",
+    "chaos": "BENCH_chaos.json",
 }
 MODEL_TOL = 0.10
 MEASURED_TOL = 0.50
@@ -141,6 +143,36 @@ def extract_metrics(kind: str, payload: dict) -> List[Tuple[str, float, str]]:
             metrics.append((
                 "decode/tokens_per_s", float(decode["tokens_per_s"]),
                 "measured",
+            ))
+    elif kind == "chaos":
+        chaos = payload.get("chaos") or {}
+        totals = chaos.get("totals") or {}
+        # recovery accounting is deterministic under the seeded fault plan:
+        # any drop is a healing-path regression, not runner jitter
+        if "recovery_rate" in totals:
+            metrics.append((
+                "chaos/totals/recovery_rate",
+                float(totals["recovery_rate"]), "model",
+            ))
+        if "injected" in totals:
+            # injected count dropping means a fault site went dark — the
+            # drill stopped exercising a healing path it used to cover
+            metrics.append((
+                "chaos/totals/injected", float(totals["injected"]), "model",
+            ))
+        sr = chaos.get("store_read") or {}
+        for key in ("quarantined", "rebuilds", "rebuilt_disk_hits"):
+            if key in sr:
+                metrics.append((
+                    f"chaos/store_read/{key}", float(sr[key]), "model",
+                ))
+        stream = chaos.get("stream_retry") or {}
+        if "retry_overhead" in stream:
+            # lower-is-better, so gate its inverse (retry cheapness): a
+            # ballooning retry path shows up as this metric dropping
+            metrics.append((
+                "chaos/stream/retry_cheapness",
+                1.0 / float(stream["retry_overhead"]), "measured",
             ))
     else:
         raise ValueError(f"unknown bench kind {kind!r}")
